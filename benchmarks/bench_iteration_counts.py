@@ -1,0 +1,46 @@
+"""Table VII analog: iteration counts required per stop condition.
+
+The paper reports how many hand-tuned iterations match the optimized
+pipeline's time (Iter_T) and accuracy (Iter_A). We report the empirical
+per-configuration sample counts the CI machinery actually used: mean/min/
+max iterations under Confidence vs the fixed Default budget."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Tuner
+
+from .common import dgemm_benchmark, dgemm_space, emit, paper_settings, print_table
+
+
+def run(quick: bool = True) -> list[dict]:
+    space = dgemm_space(quick)
+    base = paper_settings(quick)
+    rows = []
+    for label, settings in (
+            ("Default", base),
+            ("Confidence", dataclasses.replace(base,
+                                               use_ci_convergence=True)),
+            ("C+I+O", dataclasses.replace(base, use_ci_convergence=True,
+                                          use_inner_prune=True,
+                                          use_outer_prune=True))):
+        result = Tuner(space, settings).tune(dgemm_benchmark)
+        counts = [inv.count for t in result.trials
+                  for inv in t.result.invocations]
+        rows.append({"technique": label,
+                     "mean_iters": round(float(np.mean(counts)), 1),
+                     "min_iters": int(np.min(counts)),
+                     "max_iters": int(np.max(counts)),
+                     "total_samples": result.total_samples})
+        emit(f"iteration_counts/{label.replace('+', '_')}",
+             float(np.mean(counts)),
+             f"total={result.total_samples}")
+    print_table("Table VII analog: per-configuration iteration counts", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

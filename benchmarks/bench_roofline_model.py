@@ -1,0 +1,59 @@
+"""Fig. 1 analog: assemble this host's empirical Roofline model from the
+autotuned peaks — the paper's end product (no vendor specs needed)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (Evaluator, TRIAD_INTENSITY, Tuner, from_measurements,
+                        operational_intensity, ridge_point)
+
+from .common import (dgemm_benchmark, dgemm_space, emit, paper_settings,
+                     print_table, triad_invocation_factory)
+
+
+def run(quick: bool = True) -> dict:
+    settings = dataclasses.replace(paper_settings(quick),
+                                   use_ci_convergence=True,
+                                   use_inner_prune=True,
+                                   use_outer_prune=True)
+    # compute ceiling from the autotuned matmul peak
+    peak = Tuner(dgemm_space(quick), settings).tune(dgemm_benchmark)
+    peak_flops = peak.best_score * 1e9
+    # bandwidth slopes from TRIAD at cache-resident and streaming sizes
+    ev = Evaluator(settings)
+    bw_cache = ev.evaluate(triad_invocation_factory(1 << 22)).score * 1e9
+    bw_dram = ev.evaluate(triad_invocation_factory(1 << 28)).score * 1e9
+
+    model = from_measurements("this-host", peak_flops,
+                              {"cache": bw_cache, "dram": bw_dram})
+    dgemm_I = operational_intensity(
+        2 * 1024 ** 3, 3 * 1024 * 1024 * 4)  # n=m=k=1024 f32
+    rows = [{
+        "quantity": "peak compute",
+        "value": f"{peak_flops/1e9:.1f} GFLOP/s",
+    }, {
+        "quantity": "bw (cache)", "value": f"{bw_cache/1e9:.1f} GB/s",
+    }, {
+        "quantity": "bw (dram)", "value": f"{bw_dram/1e9:.1f} GB/s",
+    }, {
+        "quantity": "ridge I (dram)",
+        "value": f"{ridge_point(peak_flops, bw_dram):.1f} FLOP/B",
+    }, {
+        "quantity": "TRIAD I", "value": f"{TRIAD_INTENSITY:.4f} FLOP/B",
+    }, {
+        "quantity": "DGEMM-1024 I", "value": f"{dgemm_I:.1f} FLOP/B",
+    }]
+    print_table("Fig. 1 analog: empirical roofline (this host)", rows)
+    print(model.ascii_plot(
+        "dram", marks=[("T", TRIAD_INTENSITY,
+                        model.attainable(TRIAD_INTENSITY, "dram")),
+                       ("D", dgemm_I, peak_flops)]))
+    emit("roofline/peak_gflops", 0.0, f"{peak_flops/1e9:.1f}")
+    emit("roofline/bw_dram_gbps", 0.0, f"{bw_dram/1e9:.1f}")
+    return {"peak_flops": peak_flops, "bw_dram": bw_dram,
+            "bw_cache": bw_cache, "csv": model.to_csv()}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 6 analog: per-configuration evaluation time and performance as a
+function of matrix size — the basis for the paper's observation that search
+*order* matters (reversal starts at the expensive end)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import Evaluator
+
+from .common import dgemm_invocation_factory, emit, paper_settings, print_table
+
+SIZES = [128, 256, 512, 1024, 1536]
+
+
+def run(quick: bool = True) -> list[dict]:
+    settings = dataclasses.replace(paper_settings(quick),
+                                   use_ci_convergence=True)
+    ev = Evaluator(settings)
+    rows = []
+    sizes = SIZES[:4] if quick else SIZES
+    for n in sizes:
+        t0 = time.perf_counter()
+        r = ev.evaluate(dgemm_invocation_factory(n, n, n))
+        dt = time.perf_counter() - t0
+        rows.append({"n=m=k": n, "gflops": round(r.score, 1),
+                     "eval_time_s": round(dt, 3),
+                     "samples": r.total_samples})
+        emit(f"size_sweep/n{n}", dt * 1e6 / max(r.total_samples, 1),
+             f"gflops={r.score:.1f}")
+    print_table("Fig. 6 analog: time & performance vs matrix size", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Shared benchmark utilities: CSV emission, host matmul/triad objectives.
+
+All benches print ``name,us_per_call,derived`` CSV rows (harness contract)
+plus richer per-table output to stderr-safe stdout sections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Direction, EvaluationSettings, SearchSpace, grid,
+                        timed_sampler)
+from repro.core.searchspace import doubling_from, powers_of_two
+
+CSV_ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    CSV_ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def print_table(title: str, rows: list[dict]) -> None:
+    print(f"\n## {title}")
+    if not rows:
+        print("(empty)")
+        return
+    keys = list(rows[0].keys())
+    print(" | ".join(f"{k:>14s}" for k in keys))
+    for r in rows:
+        print(" | ".join(f"{str(r.get(k, '')):>14s}" for k in keys))
+
+
+# ---------------------------------------------------------------------------
+# Host benchmark objectives (the paper's DGEMM / TRIAD on this machine)
+# ---------------------------------------------------------------------------
+
+
+def dgemm_invocation_factory(n: int, m: int, k: int,
+                             dtype=jnp.float32) -> Callable:
+    """One 'program invocation' of the DGEMM benchmark: allocate fresh
+    matrices, pre-heat the jitted kernel (the paper pre-heats with one
+    untimed call), return a GFLOP/s sampler."""
+    flops = 2.0 * n * m * k
+
+    def factory():
+        key = jax.random.key(int(time.time_ns()) % (2 ** 31))
+        a = jax.random.normal(jax.random.fold_in(key, 1), (n, k), dtype)
+        b = jax.random.normal(jax.random.fold_in(key, 2), (k, m), dtype)
+        f = jax.jit(jnp.dot)
+        jax.block_until_ready(f(a, b))      # pre-heat
+
+        def run():
+            jax.block_until_ready(f(a, b))
+
+        return timed_sampler(run, work=flops / 1e9)  # GFLOP/s
+
+    return factory
+
+
+def triad_invocation_factory(n_bytes: int, dtype=jnp.float32) -> Callable:
+    """TRIAD C = A + 3B over vectors totalling ~n_bytes working set."""
+    itemsize = jnp.dtype(dtype).itemsize
+    n = max(1024, n_bytes // (3 * itemsize))
+    moved = 3.0 * n * itemsize
+
+    def factory():
+        key = jax.random.key(n % (2 ** 31))
+        a = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
+        b = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
+
+        @jax.jit
+        def f(x, y):
+            return x + 3.0 * y
+
+        jax.block_until_ready(f(a, b))
+
+        def run():
+            jax.block_until_ready(f(a, b))
+
+        return timed_sampler(run, work=moved / 1e9)  # GB/s
+
+    return factory
+
+
+def dgemm_space(quick: bool = True) -> SearchSpace:
+    """The paper's reduced DGEMM space (Sec. IV-A), scaled to this host:
+    leading dims as multiples of 2 (500-doubling ladder) plus powers of 2."""
+    if quick:
+        return grid(n=(256, 512, 1024), m=(256, 512, 1024),
+                    k=(64, 128, 256, 512))
+    return grid(n=doubling_from(500, 4000) + powers_of_two(512, 2048),
+                m=doubling_from(500, 4000) + powers_of_two(512, 2048),
+                k=powers_of_two(64, 2048))
+
+
+def paper_settings(quick: bool = True) -> EvaluationSettings:
+    """Table I scaled for CI runtime: same structure, smaller budget."""
+    if quick:
+        return EvaluationSettings(max_invocations=4, max_iterations=60,
+                                  max_time_s=1.5,
+                                  direction=Direction.MAXIMIZE)
+    return EvaluationSettings(max_invocations=10, max_iterations=200,
+                              max_time_s=10.0,
+                              direction=Direction.MAXIMIZE)
+
+
+def dgemm_benchmark(cfg: dict) -> Callable:
+    return dgemm_invocation_factory(cfg["n"], cfg["m"], cfg["k"])

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (via ``common.emit``) plus the
+human-readable tables. ``--full`` uses the paper's Table I budgets (slow);
+the default quick mode preserves every comparison's structure at CI-scale
+budgets.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only <name>]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_distributed_tuner, bench_iteration_counts,
+               bench_kernel_autotune, bench_matmul_peak, bench_optimizations,
+               bench_roofline_model, bench_size_sweep, bench_triad)
+from .common import emit
+
+BENCHES = {
+    "matmul_peak": bench_matmul_peak.run,          # Tables IV/V
+    "triad": bench_triad.run,                      # Table VI
+    "iteration_counts": bench_iteration_counts.run,  # Table VII
+    "optimizations": bench_optimizations.run,      # Tables VIII-XI (headline)
+    "size_sweep": bench_size_sweep.run,            # Fig. 6
+    "roofline_model": bench_roofline_model.run,    # Fig. 1
+    "kernel_autotune": bench_kernel_autotune.run,  # beyond-paper
+    "distributed_tuner": bench_distributed_tuner.run,  # beyond-paper
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper Table I budgets (minutes -> ~1h)")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    selected = {args.only: BENCHES[args.only]} if args.only else BENCHES
+    for name, fn in selected.items():
+        t0 = time.perf_counter()
+        try:
+            fn(quick=quick)
+            emit(f"{name}/total", (time.perf_counter() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa: BLE001
+            emit(f"{name}/total", (time.perf_counter() - t0) * 1e6,
+                 f"FAIL:{type(e).__name__}")
+            print(f"[benchmarks] {name} failed: {e}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""The paper end-to-end: autotune DGEMM + TRIAD, emit this machine's
+empirical Roofline model — no vendor spec sheet required.
+
+  PYTHONPATH=src:. python examples/autotune_roofline.py [--full]
+"""
+
+import argparse
+
+from benchmarks import bench_roofline_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper Table I budgets (slow)")
+    ap.add_argument("--csv", default=None, help="write roofline curve CSV")
+    args = ap.parse_args()
+    result = bench_roofline_model.run(quick=not args.full)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(result["csv"])
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

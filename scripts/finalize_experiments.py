@@ -1,0 +1,32 @@
+"""Inject generated dry-run/roofline tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src python scripts/finalize_experiments.py results/*.jsonl
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.report import (dryrun_table, load, roofline_table,  # noqa: E402
+                                 summary)
+
+
+def main() -> None:
+    records = load(sys.argv[1:])
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    dry = (summary(records) + "\n\n" + dryrun_table(records))
+    roof = (roofline_table(records, "single")
+            + "\n\n#### Multi-pod (512 chips)\n\n"
+            + roofline_table(records, "multi"))
+    text = text.replace("<!-- DRYRUN_TABLE -->", dry)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated:",
+          summary(records).splitlines()[0])
+
+
+if __name__ == "__main__":
+    main()

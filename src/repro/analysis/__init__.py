@@ -1,0 +1,7 @@
+"""Dry-run analysis: HLO collective parsing + roofline terms."""
+
+from .hlo import CollectiveStats, parse_collectives
+from .terms import RooflineTerms, analyze_compiled, model_flops
+
+__all__ = ["CollectiveStats", "RooflineTerms", "analyze_compiled",
+           "model_flops", "parse_collectives"]

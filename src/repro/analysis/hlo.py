@@ -1,0 +1,128 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis`` does not report collective bytes, so we scan the compiled
+module for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, take each op's result shape, and convert to
+estimated per-device link traffic with the standard ring-algorithm factors:
+
+    all-reduce        2 * bytes * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather        bytes * (n-1)/n          (result = gathered size)
+    reduce-scatter    bytes * (n-1)            (operand = result * n)
+    all-to-all        bytes * (n-1)/n
+    collective-permute bytes                   (point-to-point)
+
+where n is the replica-group size parsed from the op's replica_groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[16,1024]{1,0} all-gather(%x), ...
+#       ROOT %tuple = (f32[4]{0}, f32[4]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype = m.group("dtype")
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    """Per-device collective traffic estimate."""
+
+    bytes_by_op: dict[str, float]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> str:
+        parts = [f"{op}:{cnt}x/{by/1e6:.1f}MB"
+                 for op, (cnt, by) in sorted(
+                     {o: (self.count_by_op[o], self.bytes_by_op[o])
+                      for o in self.count_by_op}.items())]
+        return " ".join(parts) if parts else "none"
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    bytes_by_op: dict[str, float] = defaultdict(float)
+    count_by_op: dict[str, int] = defaultdict(int)
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting async -start/-done pairs: count -start, skip
+        # -done (its result repeats the -start shape)
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("shape"))
+        if "-start(" in line and op == "all-reduce":
+            # all-reduce-start result is the final tensor shape; fine.
+            pass
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            traffic = 2.0 * size * frac
+        elif op == "all-gather":
+            traffic = size * frac
+        elif op == "reduce-scatter":
+            traffic = size * (n - 1)
+        elif op == "all-to-all":
+            traffic = size * frac
+        else:  # collective-permute
+            traffic = float(size)
+        bytes_by_op[op] += traffic
+        count_by_op[op] += 1
+    return CollectiveStats(bytes_by_op=dict(bytes_by_op),
+                           count_by_op=dict(count_by_op))

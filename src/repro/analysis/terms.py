@@ -1,0 +1,123 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_bytes_per_device / link_bw       [s]
+
+``cost_analysis()`` on an SPMD-compiled module reports per-device numbers
+(verified empirically: flops == total/chips), so no chip division is needed
+beyond what XLA already did. MODEL_FLOPS uses the assignment's convention:
+6·N·D for training (fwd+bwd), 2·N·D per token for inference, with N the
+active parameter count (MoE discounts inactive experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.roofline import TPU_V5E, MachineSpec
+from ..models.config import ModelConfig, WorkloadShape
+from .hlo import CollectiveStats, parse_collectives
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_summary: str
+    peak_bytes_per_dev: float      # memory_analysis: args+temp+out
+    model_flops_total: float       # analytic 6ND / 2ND
+    chips: int
+    machine: MachineSpec = TPU_V5E
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / self.machine.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / self.machine.mem_bandwidths["hbm"]
+
+    @property
+    def collective_s(self) -> float:
+        if self.machine.link_bandwidth <= 0:
+            return 0.0
+        return self.coll_bytes_per_dev / self.machine.link_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """max of the three terms = perfectly-overlapped lower bound."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/dispatch/padding waste."""
+        total_hlo = self.flops_per_dev * self.chips
+        if total_hlo <= 0:
+            return 0.0
+        return self.model_flops_total / total_hlo
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline lower bound (the score the
+        perf loop pushes up): MODEL_FLOPS / (chips · peak · max-term)."""
+        t = self.step_time_lower_bound_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops_total / (self.chips * self.machine.peak_flops
+                                         * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "dominant": self.dominant,
+            "useful_flops_ratio": round(self.useful_flops_ratio, 3),
+            "mfu_bound": round(self.mfu_bound, 3),
+            "hbm_gb_per_dev": round(self.peak_bytes_per_dev / 1e9, 2),
+            "collectives": self.coll_summary,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: WorkloadShape) -> float:
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_compiled(compiled, cfg: ModelConfig, shape: WorkloadShape,
+                     mesh_name: str, chips: int) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, chips)
+    peak_bytes = 0.0
+    if ma is not None:
+        peak_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                      + ma.temp_size_in_bytes)
+    return RooflineTerms(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name,
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=coll.total_bytes,
+        coll_summary=coll.summary(),
+        peak_bytes_per_dev=peak_bytes,
+        model_flops_total=model_flops(cfg, shape),
+        chips=chips,
+    )

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic saves, manifests, elastic reshard."""
+
+from .manager import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

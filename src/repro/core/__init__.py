@@ -1,0 +1,37 @@
+"""Core contribution of the paper: CI-pruned autotuning benchmarking.
+
+Public API re-exports. See DESIGN.md §2 for the layer map.
+"""
+
+from .confidence import (Interval, ReservoirBootstrap, ci_mean,
+                         median_of_means, normal_quantile,
+                         sign_test_median_ci, t_quantile)
+from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
+                        InvocationResult, timed_sampler)
+from .roofline import (TPU_V5E, MachineSpec, RooflineModel, TRIAD_INTENSITY,
+                       attainable, from_measurements, operational_intensity,
+                       ridge_point)
+from .searchspace import (Config, Param, SearchSpace, doubling_from, grid,
+                          param, powers_of_two)
+from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
+                              MaxTime, StopCondition, StopDecision,
+                              UpperBoundPrune)
+from .tuner import (BenchmarkFactory, TrialRecord, Tuner, TuningResult,
+                    compare_techniques, standard_techniques)
+from .welford import WelfordState, from_samples, init, merge, tree_merge, update
+
+__all__ = [
+    "Interval", "ReservoirBootstrap", "ci_mean", "median_of_means",
+    "normal_quantile", "sign_test_median_ci", "t_quantile",
+    "EvalResult", "EvaluationSettings", "Evaluator", "InvocationResult",
+    "timed_sampler",
+    "TPU_V5E", "MachineSpec", "RooflineModel", "TRIAD_INTENSITY", "attainable",
+    "from_measurements", "operational_intensity", "ridge_point",
+    "Config", "Param", "SearchSpace", "doubling_from", "grid", "param",
+    "powers_of_two",
+    "CIConverged", "Direction", "EvalContext", "MaxCount", "MaxTime",
+    "StopCondition", "StopDecision", "UpperBoundPrune",
+    "BenchmarkFactory", "TrialRecord", "Tuner", "TuningResult",
+    "compare_techniques", "standard_techniques",
+    "WelfordState", "from_samples", "init", "merge", "tree_merge", "update",
+]

@@ -1,0 +1,247 @@
+"""Two-level benchmark evaluation (paper Fig. 2).
+
+The paper evaluates every configuration with an *inner iteration loop*
+(repeated timed calls inside one process) nested in an *outer invocation
+loop* (fresh process/JIT state per invocation, after Georges et al.'s
+VM-invocation-level repetition). Both loops carry their own Welford stream
+and their own stop conditions:
+
+  inner:  MaxTime + MaxCount + [CIConverged "C"] + [UpperBoundPrune "I"]
+  outer:  MaxCount(invocations) + [CIConverged] + [UpperBoundPrune "O"]
+
+``Evaluator.evaluate`` runs the full two-level process for one configuration
+and returns an :class:`EvalResult` with the score (mean of invocation means),
+sample/timing accounting, and the stop reasons — everything the benchmark
+tables in the paper report (iteration counts, search time, result).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+from . import welford
+from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
+                              MaxTime, StopCondition, StopDecision,
+                              UpperBoundPrune, first_decision)
+
+# ``make_invocation()`` models one outer-loop program invocation: it performs
+# per-invocation setup (allocation, jit, pre-heat — the paper pre-heats with
+# one untimed DGEMM call) and returns a zero-arg sampler producing one metric
+# observation per call (e.g. GFLOP/s of one timed kernel execution).
+InvocationFactory = Callable[[], Callable[[], float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class InvocationResult:
+    mean: float
+    count: int
+    elapsed_s: float
+    stop_reason: str
+    pruned: bool
+    m2: float = 0.0   # corrected sum of squares — enables exact downstream
+                      # Welford merges (distributed tuner)
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    """Outcome of evaluating one configuration."""
+
+    score: float                      # mean of invocation means
+    best_invocation: float
+    invocations: tuple[InvocationResult, ...]
+    total_samples: int
+    total_time_s: float               # wall time incl. setup
+    measured_time_s: float            # sum of timed sample durations only
+    pruned: bool                      # stopped by condition 4 at any level
+    stop_reason: str                  # outer-level stop reason
+
+
+@dataclasses.dataclass
+class EvaluationSettings:
+    """Mirrors the paper's Table I auto-tuner configuration.
+
+    The optimization flags map to the paper's technique labels:
+      use_ci_convergence -> "C"  (stop condition 3, inner loop)
+      use_inner_prune    -> "I"  (stop condition 4, iteration loop)
+      use_outer_prune    -> "O"  (stop condition 4, invocation loop)
+    With all three False the evaluator degenerates to the fixed-sample-size
+    "Default" methodology the paper benchmarks against.
+    """
+
+    max_invocations: int = 10
+    max_iterations: int = 200
+    max_time_s: float = 10.0
+    confidence: float = 0.99
+    rel_margin: float = 0.01
+    use_ci_convergence: bool = False
+    use_inner_prune: bool = False
+    use_outer_prune: bool = False
+    min_count_ci: int = 5
+    min_count_inner: int = 2
+    min_count_outer: int = 2
+    direction: Direction = Direction.MAXIMIZE
+    use_t: bool = True
+    # CI method for the inner loop (paper §VII future work, implemented):
+    # "welford"   — normal/t interval from online moments (the paper)
+    # "bootstrap" — percentile bootstrap over a bounded reservoir
+    # "median"    — sign-test CI for the median (nonparametric)
+    ci_method: str = "welford"
+    bootstrap_capacity: int = 256
+    bootstrap_resamples: int = 200
+
+    def label(self) -> str:
+        """Technique label as used in the paper's tables, e.g. 'C+I+O'."""
+        parts = []
+        if self.use_ci_convergence:
+            parts.append("C")
+        if self.use_inner_prune:
+            parts.append("I")
+        if self.use_outer_prune:
+            parts.append("O")
+        return "+".join(parts) if parts else "Default"
+
+    # -- condition stacks ----------------------------------------------------
+    def inner_conditions(self) -> list[StopCondition]:
+        conds: list[StopCondition] = [
+            MaxTime(self.max_time_s),
+            MaxCount(self.max_iterations),
+        ]
+        if self.use_ci_convergence:
+            conds.append(CIConverged(self.confidence, self.rel_margin,
+                                     min_count=self.min_count_ci,
+                                     use_t=self.use_t))
+        if self.use_inner_prune:
+            conds.append(UpperBoundPrune(self.confidence,
+                                         min_count=self.min_count_inner,
+                                         use_t=self.use_t))
+        return conds
+
+    def outer_conditions(self) -> list[StopCondition]:
+        conds: list[StopCondition] = [MaxCount(self.max_invocations)]
+        if self.use_ci_convergence:
+            conds.append(CIConverged(self.confidence, self.rel_margin,
+                                     min_count=min(3, self.max_invocations),
+                                     use_t=self.use_t))
+        if self.use_outer_prune:
+            conds.append(UpperBoundPrune(self.confidence,
+                                         min_count=self.min_count_outer,
+                                         use_t=self.use_t))
+        return conds
+
+
+class Evaluator:
+    """Runs the two-level evaluation process for one configuration."""
+
+    def __init__(self, settings: EvaluationSettings,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.settings = settings
+        self.clock = clock
+
+    # -- inner loop -----------------------------------------------------------
+    def _run_invocation(self, sample_fn: Callable[[], float],
+                        incumbent: Optional[float],
+                        conditions: Sequence[StopCondition]) -> InvocationResult:
+        from .confidence import ReservoirBootstrap, sign_test_median_ci
+        s = self.settings
+        state = welford.init()
+        boot = ReservoirBootstrap(s.bootstrap_capacity,
+                                  s.bootstrap_resamples) \
+            if s.ci_method == "bootstrap" else None
+        samples: list[float] = [] if s.ci_method == "median" else None
+        t0 = self.clock()
+        count = 0
+        decision: Optional[StopDecision] = None
+        while True:
+            x = float(sample_fn())
+            count += 1
+            state = welford.update(state, x)
+            ci_fn = None
+            if boot is not None:
+                boot.update(x)
+                ci_fn = lambda conf, _t: boot.ci_mean(conf)  # noqa: E731
+            elif samples is not None:
+                samples.append(x)
+                ci_fn = lambda conf, _t: sign_test_median_ci(  # noqa: E731
+                    samples, conf)
+            ctx = EvalContext(welford=state,
+                              elapsed_s=self.clock() - t0,
+                              count=count,
+                              incumbent=incumbent,
+                              direction=self.settings.direction,
+                              ci_fn=ci_fn)
+            decision = first_decision(conditions, ctx)
+            if decision is not None:
+                break
+        return InvocationResult(mean=float(state.mean), count=count,
+                                elapsed_s=self.clock() - t0,
+                                stop_reason=decision.reason,
+                                pruned=decision.pruned,
+                                m2=float(state.m2))
+
+    # -- outer loop -----------------------------------------------------------
+    def evaluate(self, make_invocation: InvocationFactory,
+                 incumbent: Optional[float] = None) -> EvalResult:
+        s = self.settings
+        inner_conds = s.inner_conditions()
+        outer_conds = s.outer_conditions()
+        outer_state = welford.init()
+        invocations: list[InvocationResult] = []
+        pruned = False
+        t_start = self.clock()
+        measured = 0.0
+        decision: Optional[StopDecision] = None
+        direction = s.direction
+        best_inv: Optional[float] = None
+        while True:
+            sample_fn = make_invocation()
+            inv = self._run_invocation(sample_fn, incumbent, inner_conds)
+            invocations.append(inv)
+            measured += inv.elapsed_s
+            pruned = pruned or inv.pruned
+            outer_state = welford.update(outer_state, inv.mean)
+            if best_inv is None or direction.better(inv.mean, best_inv):
+                best_inv = inv.mean
+            ctx = EvalContext(welford=outer_state,
+                              elapsed_s=self.clock() - t_start,
+                              count=len(invocations),
+                              incumbent=incumbent,
+                              direction=direction)
+            decision = first_decision(outer_conds, ctx)
+            if decision is not None:
+                pruned = pruned or decision.pruned
+                break
+            # An inner prune means this configuration cannot win; there is no
+            # value in further invocations of a doomed configuration.
+            if inv.pruned:
+                decision = StopDecision(reason="inner_pruned", pruned=True)
+                break
+        return EvalResult(score=float(outer_state.mean),
+                          best_invocation=float(best_inv),
+                          invocations=tuple(invocations),
+                          total_samples=sum(i.count for i in invocations),
+                          total_time_s=self.clock() - t_start,
+                          measured_time_s=measured,
+                          pruned=pruned,
+                          stop_reason=decision.reason)
+
+
+def timed_sampler(fn: Callable[[], None], work: float,
+                  clock: Callable[[], float] = time.perf_counter,
+                  ) -> Callable[[], float]:
+    """Wrap a side-effecting callable into a metric sampler.
+
+    Returns a sampler yielding ``work / elapsed`` per call — e.g. FLOPs/s when
+    ``work`` is the FLOP count of one call, or bytes/s for bandwidth
+    benchmarks. This is the paper's gettimeofday-around-the-BLAS-call pattern.
+    """
+
+    def sample() -> float:
+        t0 = clock()
+        fn()
+        t1 = clock()
+        dt = max(t1 - t0, 1e-12)
+        return work / dt
+
+    return sample

@@ -1,0 +1,134 @@
+"""Roofline model assembly (paper Sec. II, Eq. 1-2).
+
+    I = W / Q                      (operational intensity, FLOP/byte)
+    F_a(I) = min(B_a * I, F_p)     (attainable performance)
+
+The paper's tool emits this model from *measured* peaks (autotuned DGEMM for
+F_p, autotuned TRIAD for each memory subsystem's B_a) with no vendor specs.
+We keep that shape, and additionally ship the TPU-v5e theoretical machine
+description used by the dry-run roofline analysis (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Peak terms for one machine (theoretical or measured)."""
+
+    name: str
+    peak_flops: float                      # FLOP/s (per chip for TPU specs)
+    mem_bandwidths: Mapping[str, float]    # subsystem name -> bytes/s
+    link_bandwidth: float = 0.0            # bytes/s per ICI link (TPU)
+    chips: int = 1
+
+    @property
+    def total_flops(self) -> float:
+        return self.peak_flops * self.chips
+
+    def total_bandwidth(self, subsystem: str) -> float:
+        return self.mem_bandwidths[subsystem] * self.chips
+
+
+# TPU v5e constants given by the assignment (per chip).
+TPU_V5E = MachineSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,                     # bf16
+    mem_bandwidths={"hbm": 819e9},
+    link_bandwidth=50e9,
+)
+
+
+def attainable(intensity: float, peak_flops: float, bandwidth: float) -> float:
+    """F(I) = min(B*I, Fp) — paper Eq. 2."""
+    return min(bandwidth * intensity, peak_flops)
+
+
+def ridge_point(peak_flops: float, bandwidth: float) -> float:
+    """Intensity at which the roof flattens: I* = Fp / B."""
+    return peak_flops / bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineModel:
+    """A machine's roofline: one compute ceiling, N bandwidth slopes."""
+
+    machine: MachineSpec
+
+    def attainable(self, intensity: float, subsystem: str) -> float:
+        return attainable(intensity, self.machine.total_flops,
+                          self.machine.total_bandwidth(subsystem))
+
+    def bound(self, intensity: float, subsystem: str) -> str:
+        ridge = ridge_point(self.machine.total_flops,
+                            self.machine.total_bandwidth(subsystem))
+        return "compute" if intensity >= ridge else "memory"
+
+    # -- emission --------------------------------------------------------------
+    def curve(self, subsystem: str, i_lo: float = 2 ** -6, i_hi: float = 2 ** 12,
+              points_per_decade: int = 8) -> list[tuple[float, float]]:
+        """Log-spaced (I, F(I)) samples for plotting/CSV."""
+        out = []
+        lo, hi = math.log2(i_lo), math.log2(i_hi)
+        n = max(2, int((hi - lo) * points_per_decade / math.log2(10)))
+        for k in range(n + 1):
+            i = 2.0 ** (lo + (hi - lo) * k / n)
+            out.append((i, self.attainable(i, subsystem)))
+        return out
+
+    def to_csv(self) -> str:
+        rows = ["subsystem,intensity_flop_per_byte,attainable_flops"]
+        for sub in self.machine.mem_bandwidths:
+            for i, f in self.curve(sub):
+                rows.append(f"{sub},{i:.6g},{f:.6g}")
+        return "\n".join(rows)
+
+    def ascii_plot(self, subsystem: str, width: int = 64, height: int = 16,
+                   marks: Sequence[tuple[str, float, float]] = ()) -> str:
+        """Log-log ASCII roofline with optional (label, I, F) markers."""
+        pts = self.curve(subsystem)
+        xs = [math.log2(p[0]) for p in pts]
+        ys = [math.log2(max(p[1], 1.0)) for p in pts]
+        for _, mi, mf in marks:
+            xs.append(math.log2(mi))
+            ys.append(math.log2(max(mf, 1.0)))
+        x0, x1 = min(xs), max(xs)
+        y0, y1 = min(ys), max(ys)
+        grid = [[" "] * width for _ in range(height)]
+
+        def put(x: float, y: float, ch: str):
+            cx = int((x - x0) / max(x1 - x0, 1e-9) * (width - 1))
+            cy = int((y - y0) / max(y1 - y0, 1e-9) * (height - 1))
+            grid[height - 1 - cy][cx] = ch
+
+        for p in pts:
+            put(math.log2(p[0]), math.log2(max(p[1], 1.0)), "*")
+        for label, mi, mf in marks:
+            put(math.log2(mi), math.log2(max(mf, 1.0)), label[0].upper())
+        header = (f"roofline[{self.machine.name}/{subsystem}] "
+                  f"x=log2(I), y=log2(FLOP/s)")
+        return "\n".join([header] + ["|" + "".join(r) + "|" for r in grid])
+
+
+def from_measurements(name: str, measured_peak_flops: float,
+                      measured_bandwidths: Mapping[str, float],
+                      chips: int = 1) -> RooflineModel:
+    """Assemble the empirical model from the tuner's benchmark outputs —
+    the paper's end product."""
+    return RooflineModel(MachineSpec(
+        name=name, peak_flops=measured_peak_flops,
+        mem_bandwidths=dict(measured_bandwidths), chips=chips))
+
+
+def operational_intensity(flops: float, bytes_moved: float) -> float:
+    """I = W / Q — paper Eq. 1."""
+    if bytes_moved <= 0:
+        return math.inf
+    return flops / bytes_moved
+
+
+TRIAD_INTENSITY = 2.0 / 24.0  # paper Sec. III-B: 2 FLOP per 24 bytes = 1/12

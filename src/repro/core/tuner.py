@@ -1,0 +1,212 @@
+"""The autotuner: exhaustive search + CI-pruned evaluation (paper Fig. 2).
+
+For every configuration in the (ordered) search space the tuner runs the
+two-level :class:`~repro.core.evaluator.Evaluator`, passing the incumbent
+best score so that stop condition 4 can prune doomed configurations early.
+The paper's experiments (Tables VIII-XI) are exactly runs of this object
+under different :class:`EvaluationSettings` flags and search orders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
+                        InvocationFactory)
+from .searchspace import Config, SearchSpace
+from .stop_conditions import Direction
+
+__all__ = ["BenchmarkFactory", "TrialRecord", "Tuner", "TuningResult",
+           "compare_techniques", "standard_techniques",
+           "tune_successive_halving"]
+
+# A benchmark binds a configuration to a per-invocation sampler factory.
+BenchmarkFactory = Callable[[Config], InvocationFactory]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialRecord:
+    config: Config
+    result: EvalResult
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningResult:
+    best_config: Optional[Config]
+    best_score: Optional[float]
+    trials: tuple[TrialRecord, ...]
+    total_time_s: float
+    total_samples: int
+    n_pruned: int
+    settings_label: str
+    order: str
+
+    def summary_row(self) -> dict:
+        return {
+            "technique": self.settings_label + ("+R" if self.order == "reverse" else ""),
+            "best_score": self.best_score,
+            "best_config": self.best_config,
+            "time_s": round(self.total_time_s, 4),
+            "samples": self.total_samples,
+            "pruned": self.n_pruned,
+            "trials": len(self.trials),
+        }
+
+
+class Tuner:
+    """Exhaustive/reversed/random-order autotuner with incumbent pruning."""
+
+    def __init__(self, space: SearchSpace, settings: EvaluationSettings,
+                 order: str = "exhaustive", seed: Optional[int] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.space = space
+        self.settings = settings
+        self.order = order
+        self.seed = seed
+        self.clock = clock
+
+    def tune(self, benchmark: BenchmarkFactory,
+             progress: Optional[Callable[[Config, EvalResult], None]] = None,
+             ) -> TuningResult:
+        evaluator = Evaluator(self.settings, clock=self.clock)
+        direction = self.settings.direction
+        best_cfg: Optional[Config] = None
+        best_score: Optional[float] = None
+        trials: list[TrialRecord] = []
+        t0 = self.clock()
+        for cfg in self.space.ordered(self.order, seed=self.seed):
+            result = evaluator.evaluate(benchmark(cfg), incumbent=best_score)
+            trials.append(TrialRecord(config=cfg, result=result))
+            if progress is not None:
+                progress(cfg, result)
+            if not result.pruned and (
+                    best_score is None
+                    or direction.better(result.score, best_score)):
+                best_score = result.score
+                best_cfg = cfg
+        return TuningResult(
+            best_config=best_cfg,
+            best_score=best_score,
+            trials=tuple(trials),
+            total_time_s=self.clock() - t0,
+            total_samples=sum(t.result.total_samples for t in trials),
+            n_pruned=sum(1 for t in trials if t.result.pruned),
+            settings_label=self.settings.label(),
+            order=self.order,
+        )
+
+
+def compare_techniques(space: SearchSpace, benchmark: BenchmarkFactory,
+                       base: EvaluationSettings,
+                       techniques: Optional[dict[str, tuple[EvaluationSettings, str]]] = None,
+                       ) -> dict[str, TuningResult]:
+    """Run the paper's technique grid (Default / C / C+I / C+I+O, +-R) on one
+    benchmark and return the per-technique :class:`TuningResult`s.
+
+    This is the engine behind the Tables VIII-XI reproduction.
+    """
+    if techniques is None:
+        techniques = standard_techniques(base)
+    out: dict[str, TuningResult] = {}
+    for label, (settings, order) in techniques.items():
+        out[label] = Tuner(space, settings, order=order).tune(benchmark)
+    return out
+
+
+def tune_successive_halving(space: SearchSpace, benchmark: BenchmarkFactory,
+                            base: EvaluationSettings, eta: int = 3,
+                            min_iterations: int = 4,
+                            clock: Callable[[], float] = time.perf_counter,
+                            ) -> TuningResult:
+    """Successive halving with CI-informed promotion (beyond-paper,
+    DESIGN.md §8.3).
+
+    Rung r evaluates the survivors with an iteration budget that grows by
+    ``eta`` per rung; only the top 1/eta (by CI-aware comparison: a config
+    survives if its CI upper bound reaches the cutoff score) advance. The
+    same stop conditions apply inside each rung, so condition 4 still
+    prunes doomed configs early within a rung.
+    """
+    from .confidence import ci_mean
+    from .welford import WelfordState
+
+    direction = base.direction
+    configs = space.ordered("exhaustive")
+    trials: list[TrialRecord] = []
+    t0 = clock()
+    total_samples = 0
+    budget = min_iterations
+    rung_settings = dataclasses.replace(
+        base, max_invocations=1, max_iterations=budget)
+    best_cfg: Optional[Config] = None
+    best_score: Optional[float] = None
+    survivors = configs
+    while survivors:
+        evaluator = Evaluator(rung_settings, clock=clock)
+        scored = []
+        for cfg in survivors:
+            res = evaluator.evaluate(benchmark(cfg), incumbent=best_score)
+            trials.append(TrialRecord(config=cfg, result=res))
+            total_samples += res.total_samples
+            if not res.pruned:
+                scored.append((cfg, res))
+                if best_score is None or direction.better(res.score,
+                                                          best_score):
+                    best_score, best_cfg = res.score, cfg
+        if len(scored) <= 1:
+            break
+        scored.sort(key=lambda cr: cr[1].score,
+                    reverse=(direction is Direction.MAXIMIZE))
+        keep = max(1, len(scored) // eta)
+        cutoff = scored[keep - 1][1].score
+        kept = []
+        for cfg, res in scored:
+            # CI-aware promotion: survive if the CI bound facing the cutoff
+            # still reaches it (the paper's Listing-1 logic as a promoter)
+            state = WelfordState(count=float(res.total_samples),
+                                 mean=res.score,
+                                 m2=sum(i.m2 for i in res.invocations))
+            interval = ci_mean(state, base.confidence)
+            bound = interval.hi if direction is Direction.MAXIMIZE \
+                else interval.lo
+            if direction.better(bound, cutoff) or bound == cutoff or \
+                    res.score == cutoff or direction.better(res.score,
+                                                            cutoff):
+                kept.append(cfg)
+        survivors = kept[:max(1, len(scored) // eta)] \
+            if len(kept) > len(scored) // eta else kept
+        if len(survivors) == 1:
+            break
+        budget *= eta
+        rung_settings = dataclasses.replace(rung_settings,
+                                            max_iterations=budget)
+    return TuningResult(
+        best_config=best_cfg, best_score=best_score, trials=tuple(trials),
+        total_time_s=clock() - t0, total_samples=total_samples,
+        n_pruned=sum(1 for t in trials if t.result.pruned),
+        settings_label="SuccessiveHalving", order="exhaustive")
+
+
+def standard_techniques(base: EvaluationSettings,
+                        ) -> dict[str, tuple[EvaluationSettings, str]]:
+    """The paper's Tables VIII-XI rows (minus hand-tuned rows, which are
+    constructed by the benchmark harness since they need manual counts)."""
+
+    def with_flags(**kw) -> EvaluationSettings:
+        return dataclasses.replace(base, **kw)
+
+    c = dict(use_ci_convergence=True)
+    ci = dict(use_ci_convergence=True, use_inner_prune=True)
+    cio = dict(use_ci_convergence=True, use_inner_prune=True,
+               use_outer_prune=True)
+    return {
+        "Default": (with_flags(), "exhaustive"),
+        "Single": (with_flags(max_invocations=1, max_iterations=1), "exhaustive"),
+        "Confidence": (with_flags(**c), "exhaustive"),
+        "C+Inner": (with_flags(**ci), "exhaustive"),
+        "C+Inner+R": (with_flags(**ci), "reverse"),
+        "C+I+Outer": (with_flags(**cio), "exhaustive"),
+        "C+I+O+R": (with_flags(**cio), "reverse"),
+    }

@@ -1,0 +1,162 @@
+"""Welford online moment accumulation (paper Eq. 5-7) + parallel merge.
+
+The paper (Sec. III-C.3) uses Welford's online algorithm [Welford 1962] to
+track the running mean and corrected sum of squares of benchmark samples
+without storing them, so that a confidence interval can be computed after
+every sample and the evaluation loop terminated as early as possible.
+
+We provide:
+  * ``WelfordState`` — an immutable snapshot (n, mean, m2) usable from plain
+    Python and inside jitted JAX code (it is a pytree).
+  * ``update``      — one-sample Welford step (Eq. 6/7).
+  * ``merge``       — exact pairwise combination of two partial streams
+    (Chan, Golub & LeVeque 1979). This is the beyond-paper piece that lets a
+    fleet of workers benchmark shards of a search space and reduce their
+    moment statistics exactly (see ``repro.distributed.tuner``).
+  * ``from_samples`` — bulk construction (two-pass, for tests/oracles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WelfordState:
+    """Running moments of a scalar sample stream.
+
+    Attributes:
+      count: number of samples accumulated (float so it jits cleanly).
+      mean:  running sample mean  (paper Eq. 6).
+      m2:    corrected sum of squares C_n = sum (x_i - mean)^2 (paper Eq. 7).
+    """
+
+    count: jax.Array | float
+    mean: jax.Array | float
+    m2: jax.Array | float
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def variance(self):
+        """Unbiased sample variance S^2 = C / (n - 1) (paper Eq. 5)."""
+        n = self.count
+        if isinstance(n, (int, float)):
+            return self.m2 / (n - 1.0) if n > 1 else 0.0
+        return jnp.where(n > 1, self.m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+
+    @property
+    def std(self):
+        v = self.variance
+        if isinstance(v, (int, float)):
+            return math.sqrt(max(v, 0.0))
+        return jnp.sqrt(jnp.maximum(v, 0.0))
+
+    @property
+    def sem(self):
+        """Standard error of the mean."""
+        n = self.count
+        if isinstance(n, (int, float)):
+            return self.std / math.sqrt(n) if n > 0 else float("inf")
+        return jnp.where(n > 0, self.std / jnp.sqrt(jnp.maximum(n, 1.0)), jnp.inf)
+
+    @property
+    def cov(self):
+        """Coefficient of variation (Georges et al. steady-state detector)."""
+        m = self.mean
+        if isinstance(m, (int, float)):
+            return self.std / abs(m) if m != 0 else float("inf")
+        return jnp.where(m != 0, self.std / jnp.abs(m), jnp.inf)
+
+
+def init() -> WelfordState:
+    """Empty accumulator (base case of paper Eq. 6/7: C_1 = 0, m_1 = x_1)."""
+    return WelfordState(count=0.0, mean=0.0, m2=0.0)
+
+
+def update(state: WelfordState, x) -> WelfordState:
+    """One Welford step: fold sample ``x`` into ``state``.
+
+    Implements the recurrences (paper Eq. 6 and Eq. 7):
+        m_n = m_{n-1} + (x_n - m_{n-1}) / n
+        C_n = C_{n-1} + (n-1)/n * (x_n - m_{n-1})^2
+    Works both on Python floats and traced JAX scalars.
+    """
+    n = state.count + 1.0
+    delta = x - state.mean
+    mean = state.mean + delta / n
+    # (n-1)/n * delta^2  ==  delta * (x - new_mean)
+    m2 = state.m2 + delta * (x - mean)
+    return WelfordState(count=n, mean=mean, m2=m2)
+
+
+def merge(a: WelfordState, b: WelfordState) -> WelfordState:
+    """Exactly combine two partial Welford streams (Chan et al. 1979).
+
+    n   = n_a + n_b
+    mu  = (n_a mu_a + n_b mu_b) / n
+    M2  = M2_a + M2_b + delta^2 * n_a n_b / n
+
+    This is associative and commutative up to fp error, so it is a valid
+    operand for tree reductions and ``jax.lax`` collectives — the basis of the
+    distributed tuner.
+    """
+    na, nb = a.count, b.count
+    n = na + nb
+    if isinstance(n, (int, float)) and n == 0:
+        return init()
+    delta = b.mean - a.mean
+    safe_n = n if isinstance(n, (int, float)) else jnp.maximum(n, 1.0)
+    mean = a.mean + delta * (nb / safe_n)
+    m2 = a.m2 + b.m2 + delta * delta * (na * nb / safe_n)
+    if not isinstance(n, (int, float)):
+        # Guard the n == 0 case under tracing.
+        mean = jnp.where(n > 0, mean, 0.0)
+        m2 = jnp.where(n > 0, m2, 0.0)
+    return WelfordState(count=n, mean=mean, m2=m2)
+
+
+def from_samples(samples: Iterable[float]) -> WelfordState:
+    """Fold an iterable of samples (reference path; used by tests as oracle)."""
+    state = init()
+    for x in samples:
+        state = update(state, float(x))
+    return state
+
+
+# ---- vectorized JAX variants -----------------------------------------------
+
+
+def update_jax(state: WelfordState, x: jax.Array) -> WelfordState:
+    """Alias of :func:`update`; provided for call-site clarity inside jit."""
+    return update(state, x)
+
+
+def batch_state(samples: jax.Array) -> WelfordState:
+    """Welford state of a whole array of samples, via ``lax.scan`` (jittable)."""
+
+    def body(carry, x):
+        return update(carry, x), None
+
+    zero = WelfordState(count=jnp.zeros(()), mean=jnp.zeros(()), m2=jnp.zeros(()))
+    out, _ = jax.lax.scan(body, zero, samples.astype(jnp.float32))
+    return out
+
+
+def tree_merge(states: list[WelfordState]) -> WelfordState:
+    """Pairwise tree reduction of many partial states (numerically preferred
+    over a left fold when the partials have very different counts)."""
+    if not states:
+        return init()
+    layer = list(states)
+    while len(layer) > 1:
+        nxt = [merge(layer[i], layer[i + 1]) for i in range(0, len(layer) - 1, 2)]
+        if len(layer) % 2:
+            nxt.append(layer[-1])
+        layer = nxt
+    return layer[0]

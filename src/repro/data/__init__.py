@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (sharding-aware, resumable)."""
+
+from .pipeline import DataConfig, SyntheticLM, make_batch_sharded
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch_sharded"]

@@ -1,0 +1,92 @@
+"""Synthetic LM data pipeline.
+
+Production properties this substrate actually provides:
+  * **Determinism & resumability** — batch ``i`` is a pure function of
+    (seed, i); restart from any step reproduces the exact stream with no
+    state files (the checkpoint only needs the step counter).
+  * **Sharding awareness** — ``make_batch_sharded`` materializes each
+    device's batch slice locally (no host-side global batch), the pattern
+    that scales to thousands of hosts.
+  * **Structured tokens** — a tiny k-order Markov construction instead of
+    iid noise, so the LM loss actually decreases during the training
+    example (learnable bigram structure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig, WorkloadShape
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 32000
+    structure: float = 0.8      # probability of following the Markov chain
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream: batch(i) is pure in (seed, i)."""
+
+    def __init__(self, cfg: DataConfig, batch: int, seq_len: int):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq_len = seq_len
+        # fixed random bigram successor table: token t -> succ(t)
+        rng = np.random.default_rng(cfg.seed)
+        self._succ = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=cfg.vocab_size),
+            jnp.int32)
+
+    def batch_at(self, step: int) -> dict:
+        """Global batch for one step (pure function of step)."""
+        key = jax.random.fold_in(jax.random.key(self.cfg.seed), step)
+        return {"tokens": self._tokens(key, self.batch)}
+
+    def _tokens(self, key, rows: int) -> jax.Array:
+        k_init, k_noise, k_mask = jax.random.split(key, 3)
+        first = jax.random.randint(k_init, (rows, 1), 0,
+                                   self.cfg.vocab_size)
+        noise = jax.random.randint(k_noise, (rows, self.seq_len), 0,
+                                   self.cfg.vocab_size)
+        follow = jax.random.bernoulli(k_mask, self.cfg.structure,
+                                      (rows, self.seq_len))
+
+        def step_fn(prev, xs):
+            nz, fl = xs
+            nxt = jnp.where(fl, jnp.take(self._succ, prev), nz)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            step_fn, first[:, 0],
+            (jnp.moveaxis(noise, 1, 0), jnp.moveaxis(follow, 1, 0)))
+        return jnp.moveaxis(toks, 0, 1)
+
+
+def make_batch_sharded(pipeline: SyntheticLM, step: int, mesh, spec) -> dict:
+    """Materialize the step's batch directly with the target sharding via
+    per-shard callbacks — each host/device generates only its slice."""
+    from jax.sharding import NamedSharding
+
+    shape = (pipeline.batch, pipeline.seq_len)
+    sharding = NamedSharding(mesh, spec)
+
+    def per_shard(index):
+        rows = index[0]
+        start = rows.start or 0
+        stop = rows.stop if rows.stop is not None else pipeline.batch
+        key = jax.random.fold_in(jax.random.key(pipeline.cfg.seed), step)
+        # fold the row-range so each shard's stream is independent but
+        # deterministic
+        key = jax.random.fold_in(key, start)
+        toks = pipeline._tokens(key, stop - start)
+        cols = index[1] if len(index) > 1 else slice(None)
+        return np.asarray(toks)[:, cols]
+
+    tokens = jax.make_array_from_callback(shape, sharding, per_shard)
+    return {"tokens": tokens}

@@ -1,0 +1,7 @@
+"""Distribution layer: mesh-aware sharding rules and the distributed tuner."""
+
+from .sharding import (SERVE_RULES, TRAIN_RULES, ShardingRules, logical_to_spec,
+                       spec_tree)
+
+__all__ = ["SERVE_RULES", "TRAIN_RULES", "ShardingRules", "logical_to_spec",
+           "spec_tree"]

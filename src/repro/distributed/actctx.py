@@ -1,0 +1,49 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+GSPMD's automatic propagation can settle on pathological layouts when the
+graph gives it freedom (observed: shallow unrolled models placing the FSDP
+weight sharding onto activations, replicating the batch — EXPERIMENTS.md
+§Perf iteration 0). Models therefore annotate key activations with *logical*
+axes via :func:`shard_act`; the step builders install a resolver that maps
+logical axes -> NamedSharding for the active (mesh, rules). Outside any
+context (unit tests, CPU smoke runs) ``shard_act`` is a no-op.
+
+This module deliberately imports nothing from ``repro.models`` so the model
+zoo can depend on it without cycles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional, Sequence
+
+import jax
+
+# resolver(logical_axes, shape) -> sharding or None
+Resolver = Callable[[Sequence[Optional[str]], Sequence[int]], Optional[object]]
+
+_RESOLVER: Optional[Resolver] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(resolver: Resolver):
+    """Install a resolver for the duration of a trace."""
+    global _RESOLVER
+    prev = _RESOLVER
+    _RESOLVER = resolver
+    try:
+        yield
+    finally:
+        _RESOLVER = prev
+
+
+def shard_act(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain one activation to its logical layout (no-op w/o context)."""
+    if _RESOLVER is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"logical {logical} vs shape {x.shape}")
+    sharding = _RESOLVER(logical, x.shape)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

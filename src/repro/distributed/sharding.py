@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules -> PartitionSpecs, divisibility-aware.
+
+Models annotate every parameter and activation dim with a *logical* axis name
+("embed", "heads", "mlp", "vocab", ...). A :class:`ShardingRules` maps each
+logical name to mesh axis names. ``logical_to_spec`` resolves the mapping
+against a concrete mesh, *dropping* any mesh axis that does not evenly divide
+the dimension (fallback = replication on that axis) — this is what lets one
+rule set serve all ten architectures (36-head MiniCPM simply ends up with
+replicated attention while 96-head Command-R gets full 16-way TP; see
+DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import params as params_lib
+
+MeshAxes = tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis names (in priority order)."""
+
+    rules: Mapping[str, MeshAxes]
+    name: str = "custom"
+
+    def get(self, logical: str | None) -> MeshAxes:
+        if logical is None:
+            return ()
+        return self.rules.get(logical, ())
+
+    def replace(self, **updates: MeshAxes) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return ShardingRules(rules=merged, name=self.name + "+")
+
+
+# Default rule sets. "pod" is pure data parallelism across pods; "data"
+# carries DP + FSDP (ZeRO-3 weight sharding on the contraction dim);
+# "model" carries TP (heads / mlp / vocab) and the decode-cache sequence
+# split (flash-decoding-style split-K, resolved by GSPMD collectives).
+TRAIN_RULES = ShardingRules(name="train", rules={
+    # activations: batch over DP axes; the sequence dim of saved block
+    # boundaries is sharded over "model" (Megatron-style sequence
+    # parallelism) — without it the scan backward stashes an unsharded
+    # (B_local, S, D) residual per layer and the 40-layer stack alone is
+    # 10.7GB/device (33GB peak -> 5.1GB peak on granite train_4k; see
+    # EXPERIMENTS.md §Perf)
+    "batch": ("pod", "data"),
+    "act_seq": ("model",),
+    "act_embed": (),
+    # weights
+    "embed": ("data",),          # FSDP: contraction dim sharded over data
+    "embed_r": (),               # replicated d_model (embedding table)
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": (),               # expert dim replicated; expert mlp TP'd
+    "layers": (),
+    "frames": (),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    # decode cache (unused in train)
+    "cache_seq": ("model",),
+    "cache_batch": ("data",),
+})
+
+SERVE_RULES = ShardingRules(name="serve", rules={
+    "batch": ("data",),
+    "act_seq": (),
+    "act_embed": (),
+    "embed": ("data",),          # 2D weight sharding for big checkpoints
+    "embed_r": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": (),
+    "layers": (),
+    "frames": (),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    "cache_seq": ("model",),
+    "cache_batch": ("data",),
+})
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def logical_to_spec(logical: Sequence[str | None], shape: Sequence[int],
+                    rules: ShardingRules, mesh: Mesh) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec.
+
+    Mesh axes that are absent from the mesh or do not divide the dim size are
+    dropped (replication fallback). A mesh axis may be consumed by only one
+    dim (first wins), matching GSPMD validity rules.
+    """
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim_size, name in zip(shape, logical):
+        axes: list[str] = []
+        divisor = 1
+        for ax in rules.get(name):
+            if ax in used or ax not in mesh.shape:
+                continue
+            nxt = divisor * _axis_size(mesh, ax)
+            if dim_size % nxt == 0:
+                axes.append(ax)
+                used.add(ax)
+                divisor = nxt
+        if not axes:
+            entries.append(None)
+        elif len(axes) == 1:
+            entries.append(axes[0])
+        else:
+            entries.append(tuple(axes))
+    return P(*entries)
+
+
+def spec_tree(defs: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a ParamDef tree."""
+    return params_lib._map_tree(
+        lambda _, d: logical_to_spec(d.logical, d.shape, rules, mesh), defs)
+
+
+def sharding_tree(defs: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """NamedSharding tree for a ParamDef tree."""
+    return params_lib._map_tree(
+        lambda _, d: NamedSharding(
+            mesh, logical_to_spec(d.logical, d.shape, rules, mesh)), defs)
+
+
+def activation_spec(rules: ShardingRules, mesh: Mesh,
+                    logical: Sequence[str | None],
+                    shape: Sequence[int]) -> P:
+    """Spec for an activation/input tensor (same resolution path)."""
+    return logical_to_spec(logical, shape, rules, mesh)

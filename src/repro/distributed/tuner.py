@@ -1,0 +1,126 @@
+"""Distributed CI-pruned autotuning (beyond-paper; DESIGN.md §8.1).
+
+The paper runs one node's benchmark search serially. At fleet scale two
+parallelization axes open up, both enabled by the *exact* parallel merge of
+Welford moments (Chan, Golub & LeVeque):
+
+  1. **Search-space sharding** — workers take a strided shard of the
+     (ordered) configuration list; after every round the incumbent best is
+     all-reduced so stop-condition 4 prunes against the *global* best.
+     On a real pod this is a scalar ``lax.pmax`` per round; here the
+     scheduler is simulated with faithful per-worker wall-clock accounting
+     (parallel time = max over workers).
+
+  2. **Replicated evaluation** — several workers sample the *same*
+     configuration concurrently and their (n, mean, M2) partials merge
+     exactly, so the CI tightens ~sqrt(W) faster in wall-clock terms —
+     useful for the high-variance configurations the paper's max-count cap
+     would otherwise truncate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from ..core import welford
+from ..core.confidence import Interval, ci_mean
+from ..core.evaluator import EvaluationSettings, Evaluator, InvocationFactory
+from ..core.searchspace import Config, SearchSpace
+from ..core.tuner import BenchmarkFactory, TrialRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedTuningResult:
+    best_config: Optional[Config]
+    best_score: Optional[float]
+    trials: tuple[TrialRecord, ...]
+    total_samples: int
+    serial_time_s: float           # sum of all trial times
+    parallel_time_s: float         # max over workers (simulated wall clock)
+    n_workers: int
+    n_pruned: int
+
+    @property
+    def parallel_speedup(self) -> float:
+        return self.serial_time_s / max(self.parallel_time_s, 1e-12)
+
+
+def shard_configs(configs: list[Config], n_workers: int) -> list[list[Config]]:
+    """Strided assignment: adjacent (similar-cost) configs spread across
+    workers, balancing the size-correlated evaluation cost (paper Fig. 6)."""
+    return [configs[w::n_workers] for w in range(n_workers)]
+
+
+class DistributedTuner:
+    """Search-space-sharded tuning with per-round incumbent all-reduce."""
+
+    def __init__(self, space: SearchSpace, settings: EvaluationSettings,
+                 n_workers: int = 4, order: str = "exhaustive",
+                 seed: Optional[int] = None):
+        self.space = space
+        self.settings = settings
+        self.n_workers = n_workers
+        self.order = order
+        self.seed = seed
+
+    def tune(self, benchmark: BenchmarkFactory) -> DistributedTuningResult:
+        evaluator = Evaluator(self.settings)
+        direction = self.settings.direction
+        shards = shard_configs(self.space.ordered(self.order, self.seed),
+                               self.n_workers)
+        worker_time = [0.0] * self.n_workers
+        incumbent: Optional[float] = None
+        best_cfg: Optional[Config] = None
+        trials: list[TrialRecord] = []
+        rounds = max(len(s) for s in shards)
+        for r in range(rounds):
+            # one synchronized round: each worker evaluates its r-th config
+            # against the incumbent agreed at the end of the previous round
+            round_results = []
+            for w, shard in enumerate(shards):
+                if r >= len(shard):
+                    continue
+                cfg = shard[r]
+                t0 = time.perf_counter()
+                res = evaluator.evaluate(benchmark(cfg), incumbent=incumbent)
+                worker_time[w] += time.perf_counter() - t0
+                trials.append(TrialRecord(config=cfg, result=res))
+                round_results.append((cfg, res))
+            # incumbent all-reduce (scalar pmax/pmin on a real mesh)
+            for cfg, res in round_results:
+                if not res.pruned and (incumbent is None or
+                                       direction.better(res.score, incumbent)):
+                    incumbent = res.score
+                    best_cfg = cfg
+        return DistributedTuningResult(
+            best_config=best_cfg, best_score=incumbent,
+            trials=tuple(trials),
+            total_samples=sum(t.result.total_samples for t in trials),
+            serial_time_s=sum(worker_time),
+            parallel_time_s=max(worker_time) if worker_time else 0.0,
+            n_workers=self.n_workers,
+            n_pruned=sum(1 for t in trials if t.result.pruned))
+
+
+def replicated_evaluate(make_invocation: InvocationFactory,
+                        settings: EvaluationSettings, n_workers: int,
+                        confidence: float = 0.99,
+                        ) -> tuple[Interval, welford.WelfordState, float]:
+    """Evaluate ONE configuration on ``n_workers`` concurrent workers and
+    merge their sample streams exactly. Returns (CI of merged mean, merged
+    state, simulated parallel wall-clock)."""
+    evaluator = Evaluator(settings)
+    partials = []
+    wall = 0.0
+    for _ in range(n_workers):
+        t0 = time.perf_counter()
+        res = evaluator.evaluate(make_invocation)
+        wall = max(wall, time.perf_counter() - t0)
+        for inv in res.invocations:
+            # each invocation's full (n, mean, M2) — the merge is exact
+            partials.append(welford.WelfordState(
+                count=float(inv.count), mean=inv.mean, m2=inv.m2))
+    merged = welford.tree_merge(partials)
+    return ci_mean(merged, confidence), merged, wall

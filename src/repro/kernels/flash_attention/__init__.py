@@ -1,0 +1,6 @@
+from .flash_attention import flash_attention_pallas, flops
+from .ops import flash_attention
+from .ref import attention_ref
+
+__all__ = ["attention_ref", "flash_attention", "flash_attention_pallas",
+           "flops"]

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for flash attention (padding + backend selection)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "causal", "window",
+                                             "bq", "bk", "use_pallas",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    sm_scale: float | None = None, causal: bool = True,
+                    window: int | None = None, bq: int = 512, bk: int = 512,
+                    use_pallas: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """Attention over (B, H, S, D); pads S to the block size.
+
+    Padding correctness: padded *query* rows are sliced away; padded *key*
+    rows can only attend forward of all real queries under the causal mask
+    (pad positions are appended), so they never contribute. For non-causal
+    use the reference path or pre-masked inputs.
+    """
+    if not use_pallas:
+        return attention_ref(q, k, v, sm_scale=sm_scale, causal=causal,
+                             window=window)
+    b, h, s, d = q.shape
+    bq_ = min(bq, s) if s >= 128 else s
+    bk_ = min(bk, s) if s >= 128 else s
+    pad = (-s) % max(bq_, bk_)
+    if pad:
+        cfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, cfg)
+        k = jnp.pad(k, cfg)
+        v = jnp.pad(v, cfg)
+    out = flash_attention_pallas(q, k, v, sm_scale=sm_scale, causal=causal,
+                                 window=window, bq=bq_, bk=bk_,
+                                 interpret=interpret)
+    return out[:, :, :s, :]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention: dense softmax attention with GQA,
+causal and sliding-window masks."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  sm_scale: float | None = None, causal: bool = True,
+                  window: int | None = None) -> jax.Array:
+    """Dense attention over (B, H, S, D) q and (B, Hkv, S, D) k/v."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    kb = jnp.repeat(k, group, axis=1)
+    vb = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * sm_scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vb.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from .matmul import flops, matmul_pallas, vmem_bytes
+from .ops import matmul
+from .ref import matmul_ref
+
+__all__ = ["flops", "matmul", "matmul_pallas", "matmul_ref", "vmem_bytes"]

@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for the blocked matmul kernel.
+
+Handles tile-divisibility padding, backend selection (Pallas on TPU,
+interpret-mode Pallas for validation, XLA reference otherwise) and exposes
+the tile sizes as keyword tunables for the autotuner.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+from .ref import matmul_ref
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "use_pallas",
+                                    "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 512, bn: int = 512,
+           bk: int = 512, use_pallas: bool = True,
+           interpret: bool = False) -> jax.Array:
+    """C = A @ B.
+
+    Args:
+      a, b: (m, k) and (k, n) operands, same dtype.
+      bm, bn, bk: VMEM tile sizes (the autotuner's search dimensions).
+      use_pallas: False selects the pure-XLA reference path.
+      interpret: run the Pallas kernel in interpret mode (CPU validation).
+    """
+    if not use_pallas:
+        return matmul_ref(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    ap = _pad_to(a, bm_, bk_)
+    bp = _pad_to(b, bk_, bn_)
+    out = matmul_pallas(ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:m, :n]

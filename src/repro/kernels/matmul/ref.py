@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation, matching the kernel's dtype policy."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

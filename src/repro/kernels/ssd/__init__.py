@@ -1,0 +1,6 @@
+from .ops import ssd_chunk_scan
+from .ref import ssd_chunk_scan_ref
+from .ssd import flops, ssd_chunk_scan_pallas
+
+__all__ = ["flops", "ssd_chunk_scan", "ssd_chunk_scan_pallas",
+           "ssd_chunk_scan_ref"]

@@ -1,0 +1,6 @@
+from .ops import triad
+from .ref import triad_ref
+from .triad import LANES, bytes_moved, flops, triad_pallas
+
+__all__ = ["LANES", "bytes_moved", "flops", "triad", "triad_pallas",
+           "triad_ref"]

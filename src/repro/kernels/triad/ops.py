@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the TRIAD kernel: 1D vectors in, 1D out."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import triad_ref
+from .triad import LANES, triad_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "br", "use_pallas",
+                                             "interpret"))
+def triad(a: jax.Array, b: jax.Array, *, gamma: float = 3.0, br: int = 256,
+          use_pallas: bool = True, interpret: bool = False) -> jax.Array:
+    """C = A + gamma*B for 1D vectors of any length.
+
+    Pads to a whole number of (br, LANES) tiles, runs the Pallas kernel,
+    and slices back. ``use_pallas=False`` selects the XLA reference.
+    """
+    if not use_pallas:
+        return triad_ref(a, b, gamma)
+    (n,) = a.shape
+    tile = br * LANES
+    padded = n + ((-n) % tile)
+    ap = jnp.pad(a, (0, padded - n)).reshape(padded // LANES, LANES)
+    bp = jnp.pad(b, (0, padded - n)).reshape(padded // LANES, LANES)
+    out = triad_pallas(ap, bp, gamma, br=br, interpret=interpret)
+    return out.reshape(-1)[:n]

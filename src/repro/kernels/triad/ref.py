@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the TRIAD kernel."""
+
+from __future__ import annotations
+
+import jax
+
+
+def triad_ref(a: jax.Array, b: jax.Array, gamma: float) -> jax.Array:
+    return a + gamma * b

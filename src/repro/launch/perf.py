@@ -1,0 +1,169 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver.
+
+Re-runs one dry-run cell under explicit knob overrides (sharding rules,
+remat policy, microbatches, loss chunk, ...) and prints the roofline-term
+deltas vs the baseline — the measure step of the paper's
+hypothesis -> change -> measure -> validate loop, with the dry-run cost
+model as the measurement.
+
+``--tune`` mode closes the loop with the paper's own machinery: the core
+Tuner searches a small knob space using the dominant roofline term as the
+(deterministic) objective, exactly the "autotune the benchmarking/execution
+parameters" pattern, applied to the framework itself.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch mamba2_130m \
+      --shape train_4k --tune
+"""
+
+import argparse
+import json
+
+from .. import configs
+from ..core import Direction, EvaluationSettings, Tuner, grid
+from ..models.config import SHAPES
+from ..models.transformer import StepConfig
+from .dryrun import run_cell
+
+
+def term(record: dict, name: str) -> float:
+    return record.get(f"{name}_ms", float("inf"))
+
+
+def objective(record: dict) -> float:
+    """Perfect-overlap step-time lower bound (max of the three terms)."""
+    return max(record["compute_ms"], record["memory_ms"],
+               record["collective_ms"])
+
+
+def show(tag: str, r: dict) -> None:
+    if r["status"] != "ok":
+        print(f"[{tag}] {r['status']}: {r.get('error', '')}")
+        return
+    print(f"[{tag}] compute={r['compute_ms']}ms memory={r['memory_ms']}ms "
+          f"collective={r['collective_ms']}ms -> {r['dominant']} "
+          f"| useful={r['useful_flops_ratio']} mfu_bound={r['mfu_bound']} "
+          f"peak={r['peak_gb']}GB")
+
+
+# pure 256-way data parallelism + ZeRO: the right layout for sub-2B models
+# on a 256-chip pod (TP collectives vanish; only grad sync + FSDP gathers)
+DP_ONLY = {"batch": ("pod", "data", "model"), "heads": (), "mlp": (),
+           "vocab": (), "ssm_inner": (), "act_seq": ()}
+
+PRESETS = {"dp-only": DP_ONLY}
+
+
+def run_once(arch, shape, mesh, step_kw=None, rules_override=None,
+             cfg_override=None, verbose=False):
+    step_cfg = StepConfig(**step_kw) if step_kw else None
+    return run_cell(arch, shape, mesh, step_cfg=step_cfg,
+                    rules_override=rules_override,
+                    cfg_override=cfg_override, verbose=verbose)
+
+
+def tune_knobs(arch: str, shape: str, mesh: str, out_path: str | None):
+    """CI-machinery-driven knob search on the cost-model objective."""
+    cfg = configs.get(arch)
+    knobs = {"microbatches": (1, 2)}
+    cfg_knobs = {}
+    if cfg.family in ("ssm", "hybrid"):
+        cfg_knobs["ssm_chunk"] = (128, 512)
+    else:
+        knobs["loss_chunk"] = (256, 1024)
+    space = grid(**knobs, **cfg_knobs)
+    settings = EvaluationSettings(max_invocations=1, max_iterations=1,
+                                  direction=Direction.MINIMIZE,
+                                  use_inner_prune=True)
+    records = {}
+
+    def benchmark(knob_cfg):
+        step_kw = {k: v for k, v in knob_cfg.items() if k in knobs}
+        cfg_kw = {k: v for k, v in knob_cfg.items() if k in cfg_knobs}
+
+        def factory():
+            def sample():
+                r = run_once(arch, shape, mesh, step_kw=step_kw,
+                             cfg_override=cfg_kw or None)
+                records[tuple(sorted(knob_cfg.items()))] = r
+                return objective(r) if r["status"] == "ok" else 1e12
+            return sample
+        return factory
+
+    result = Tuner(space, settings).tune(benchmark)
+    print(f"\n[tune] best knobs: {result.best_config} -> "
+          f"{result.best_score:.1f}ms lower bound "
+          f"({len(result.trials)} compiles)")
+    if out_path:
+        with open(out_path, "a") as f:
+            for k, r in records.items():
+                f.write(json.dumps({"knobs": dict(k), **r}) + "\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tune", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--grad-bf16", action="store_true")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel activations")
+    ap.add_argument("--preset", default=None, choices=list(PRESETS),
+                    help="sharding-rule preset (e.g. dp-only)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override, e.g. --set moe_group_size=128")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip recompiling the baseline (chained variants)")
+    args = ap.parse_args()
+
+    if args.tune:
+        tune_knobs(args.arch, args.shape, args.mesh, args.out)
+        return
+
+    baseline = None
+    if not args.no_baseline:
+        baseline = run_once(args.arch, args.shape, args.mesh)
+        show("baseline", baseline)
+    step_kw = {}
+    if args.microbatches is not None:
+        step_kw["microbatches"] = args.microbatches
+    if args.loss_chunk is not None:
+        step_kw["loss_chunk"] = args.loss_chunk
+    if args.remat_policy is not None:
+        step_kw["remat_policy"] = args.remat_policy
+    if args.grad_bf16:
+        step_kw["grad_bf16"] = True
+    rules_override = {"act_seq": ()} if args.no_sp else None
+    if args.preset:
+        rules_override = dict(PRESETS[args.preset])
+    cfg_override = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cfg_override[k] = int(v) if v.lstrip("-").isdigit() else v
+    if step_kw or rules_override or cfg_override:
+        varied = run_once(args.arch, args.shape, args.mesh,
+                          step_kw=step_kw or None,
+                          rules_override=rules_override,
+                          cfg_override=cfg_override or None)
+        show("variant ", varied)
+        if baseline and varied["status"] == "ok" and baseline["status"] == "ok":
+            print(f"[delta] lower bound {objective(baseline):.1f}ms -> "
+                  f"{objective(varied):.1f}ms")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps({"variant": {**step_kw, **cfg_override,
+                                                "no_sp": args.no_sp,
+                                                "preset": args.preset},
+                                    **varied}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Batched serving driver: prefill a prompt batch, then greedy decode.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..distributed import sharding as sh
+from ..models import api
+from ..models import params as params_lib
+from ..models.config import WorkloadShape
+from ..models.transformer import StepConfig
+from ..train.steps import build_decode_step, build_prefill_step
+from .mesh import make_host_mesh
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
+          smoke: bool = True, seed: int = 0) -> dict:
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    mesh = make_host_mesh()
+    step_cfg = StepConfig(remat=False, loss_chunk=min(128, prompt_len))
+    prefill_shape = WorkloadShape("serve_prefill", prompt_len, batch,
+                                  "prefill")
+    # decode cells allocate prompt+gen cache slots
+    decode_shape = WorkloadShape("serve_decode", prompt_len + gen, batch,
+                                 "decode")
+
+    params = params_lib.materialize(jax.random.key(seed),
+                                    api.param_defs(cfg))
+    key = jax.random.key(seed + 1)
+    batch_data = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
+                                               cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch_data["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (batch, cfg.n_frames, cfg.d_enc),
+            cfg.jdtype)
+    if cfg.family == "vlm":
+        batch_data["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (batch, cfg.n_image_tokens, cfg.d_model), cfg.jdtype)
+
+    prefill = build_prefill_step(cfg, prefill_shape, mesh,
+                                 step_cfg=step_cfg).jitted()
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch_data)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    cache = api.extend_cache(cache, gen)
+
+    decode = build_decode_step(cfg, decode_shape, mesh,
+                               step_cfg=step_cfg)
+    # jit directly (cache shapes here come from the live prefill)
+    decode_fn = jax.jit(decode.fn)
+
+    tokens = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1).astype(
+        jnp.int32)
+    generated = [tokens]
+    t0 = time.perf_counter()
+    for t in range(gen - 1):
+        step_batch = dict(batch_data)
+        step_batch["tokens"] = tokens
+        logits, cache = decode_fn(params, step_batch, cache,
+                                  jnp.int32(prompt_len + t))
+        tokens = jnp.argmax(logits[:, :, :cfg.vocab_size],
+                            axis=-1).astype(jnp.int32)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    return {
+        "tokens": np.asarray(out),
+        "prefill_s": t_prefill,
+        "decode_s_per_token": t_decode / max(gen - 1, 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    result = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                   gen=args.gen, smoke=args.smoke)
+    print(f"[serve] generated shape {result['tokens'].shape} "
+          f"prefill={result['prefill_s']*1e3:.0f}ms "
+          f"decode={result['decode_s_per_token']*1e3:.1f}ms/token")
+    print(result["tokens"][:2, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: the ten assigned architectures across six families."""
+
+from .config import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+                     ModelConfig, WorkloadShape, cache_len,
+                     cell_is_applicable, input_specs)
+from .transformer import StepConfig
+
+__all__ = ["DECODE_32K", "LONG_500K", "PREFILL_32K", "SHAPES", "TRAIN_4K",
+           "ModelConfig", "StepConfig", "WorkloadShape", "cache_len",
+           "cell_is_applicable", "input_specs"]

@@ -1,0 +1,180 @@
+"""Encoder-decoder audio LM (Whisper-style backbone).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, d_enc) directly. Positional
+information is sinusoidal (computed, not learned) on both sides — the real
+Whisper uses learned decoder positions; we use sinusoidal so decode-shape
+cells (32k decoder positions, far past Whisper's 448) stay well-defined
+(DESIGN.md §4). Attention is MHA without RoPE, as in the original.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .params import ParamDef
+from .transformer import StepConfig, _maybe_remat
+
+
+def _stacked_norm(cfg: ModelConfig, layers: int) -> ParamDef:
+    return ParamDef(shape=(layers, cfg.d_model), logical=("layers", "embed_r"),
+                    init="ones", dtype=cfg.jdtype)
+
+
+def encdec_defs(cfg: ModelConfig) -> dict:
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": L.embedding_defs(cfg),
+        "enc_layers": {
+            "ln1": _stacked_norm(cfg, ne),
+            "attn": L.attention_defs(cfg, layers=ne),
+            "ln2": _stacked_norm(cfg, ne),
+            "mlp": L.mlp_defs(cfg, layers=ne),
+        },
+        "enc_ln_f": L.norm_defs(cfg),
+        "dec_layers": {
+            "ln1": _stacked_norm(cfg, nd),
+            "attn": L.attention_defs(cfg, layers=nd),
+            "lnx": _stacked_norm(cfg, nd),
+            "xattn": L.attention_defs(cfg, layers=nd, kv_from=cfg.d_enc),
+            "ln2": _stacked_norm(cfg, nd),
+            "mlp": L.mlp_defs(cfg, layers=nd),
+        },
+        "ln_f": L.norm_defs(cfg),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           step: StepConfig) -> jax.Array:
+    h = frames + L.sinusoidal_positions(frames.shape[1],
+                                        cfg.d_enc).astype(frames.dtype)
+
+    def body(c, lp):
+        a_in = L.apply_norm(lp["ln1"], c, cfg)
+        c = c + L.attention_full(lp["attn"], a_in, cfg, causal=False,
+                                 rope=False)
+        c = c + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], c, cfg), cfg)
+        return c, None
+
+    body = _maybe_remat(body, step)
+    h, _ = L.xscan(body, h, params["enc_layers"])
+    return L.apply_norm(params["enc_ln_f"], h, cfg)
+
+
+def _dec_block(c: jax.Array, lp: dict, enc_out: jax.Array, cfg: ModelConfig,
+               step: StepConfig, *, collect_kv: bool = False):
+    a_in = L.apply_norm(lp["ln1"], c, cfg)
+    if collect_kv:
+        q = jnp.einsum("bsd,dhk->bhsk", a_in, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bhsk", a_in, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bhsk", a_in, lp["attn"]["wv"])
+        out = L._attend(q, k, v, causal=True, window=None)
+        c = c + jnp.einsum("bhsk,hkd->bsd", out, lp["attn"]["wo"])
+        kv = (k, v)
+    else:
+        c = c + L.attention_full(lp["attn"], a_in, cfg, causal=True,
+                                 rope=False, use_flash=step.use_flash)
+        kv = None
+    x_in = L.apply_norm(lp["lnx"], c, cfg)
+    c = c + L.attention_full(lp["xattn"], x_in, cfg, kv_x=enc_out,
+                             causal=False, rope=False)
+    c = c + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], c, cfg), cfg)
+    return (c, kv) if collect_kv else c
+
+
+def decoder_hidden(params: dict, tokens: jax.Array, enc_out: jax.Array,
+                   cfg: ModelConfig, step: StepConfig) -> jax.Array:
+    h = L.embed_tokens(params["embed"], tokens, cfg)
+    h = h + L.sinusoidal_positions(tokens.shape[1],
+                                   cfg.d_model).astype(h.dtype)
+    body = _maybe_remat(
+        lambda c, lp: (_dec_block(c, lp, enc_out, cfg, step), None), step)
+    h, _ = L.xscan(body, h, params["dec_layers"])
+    return L.apply_norm(params["ln_f"], h, cfg)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            step: StepConfig) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, step)
+    tokens = batch["tokens"]
+    h = decoder_hidden(params, tokens, enc_out, cfg, step)
+    targets, mask = L.next_token_targets(tokens)
+    return L.cross_entropy_loss(params["embed"], h, targets, cfg,
+                                chunk=step.loss_chunk, mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# Prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, cache_length: int) -> dict:
+    from .transformer import kv_cache_spec
+    self_cache = kv_cache_spec(cfg, batch, cache_length).shape_tree()
+    cross = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.n_kv_heads, cfg.n_frames, cfg.head_dim_),
+        cfg.jdtype)
+    return {"attn": self_cache, "cross_k": cross, "cross_v": cross}
+
+
+def cache_logical(cfg: ModelConfig) -> dict:
+    kv = ("layers", "cache_batch", "kv_heads", "frames", "head_dim")
+    return {"attn": L.KVCacheSpec(1, 1, 1, 1, 1, jnp.bfloat16).logical,
+            "cross_k": kv, "cross_v": kv}
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig,
+            step: StepConfig) -> tuple[jax.Array, dict]:
+    enc_out = encode(params, batch["frames"], cfg, step)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, cfg)
+    h = h + L.sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+
+    def body(c, lp):
+        c, kv = _dec_block(c, lp, enc_out, cfg, step, collect_kv=True)
+        cross_k = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wk"])
+        cross_v = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["xattn"]["wv"])
+        return c, (kv, cross_k, cross_v)
+
+    h, (kvs, cross_ks, cross_vs) = L.xscan(body, h,
+                                                params["dec_layers"])
+    h = L.apply_norm(params["ln_f"], h, cfg)
+    logits = L.logits_fn(params["embed"], h[:, -1:], cfg)
+    ks, vs = kvs
+    pos_tags = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                (cfg.n_layers, B, S))
+    cache = {"attn": {"k": ks, "v": vs, "pos": pos_tags},
+             "cross_k": cross_ks, "cross_v": cross_vs}
+    return logits, cache
+
+
+def decode(params: dict, tokens: jax.Array, cache: dict, pos: jax.Array,
+           cfg: ModelConfig, step: StepConfig) -> tuple[jax.Array, dict]:
+    h = L.embed_tokens(params["embed"], tokens, cfg)
+    h = h + L.sinusoidal_at(jnp.asarray(pos, jnp.float32),
+                            cfg.d_model)[None, None].astype(h.dtype)
+
+    def body(c, xs):
+        lp, lc, ck, cv = xs
+        a_in = L.apply_norm(lp["ln1"], c, cfg)
+        a, new_lc = L.attention_decode(lp["attn"], a_in, lc, pos, cfg,
+                                       rope=False)
+        c = c + a
+        # cross attention over the precomputed encoder K/V
+        x_in = L.apply_norm(lp["lnx"], c, cfg)
+        q = jnp.einsum("bsd,dhk->bhsk", x_in, lp["xattn"]["wq"])
+        out = L._attend(q, ck, cv, causal=False, window=None)
+        c = c + jnp.einsum("bhsk,hkd->bsd", out, lp["xattn"]["wo"])
+        c = c + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], c, cfg), cfg)
+        return c, new_lc
+
+    h, new_attn = L.xscan(
+        body, h, (params["dec_layers"], cache["attn"], cache["cross_k"],
+                  cache["cross_v"]))
+    h = L.apply_norm(params["ln_f"], h, cfg)
+    logits = L.logits_fn(params["embed"], h, cfg)
+    return logits, {**cache, "attn": new_attn}

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: grouped einsum dispatch (GShard-style).
+
+Token-choice top-k routing with a capacity limit, expressed as dense einsums
+so it shards cleanly under GSPMD: expert FFN weights are TP-sharded on the
+"mlp" dim, token groups ride the batch ("pod","data") axes, and the dispatch/
+combine tensors stay bounded by the *group size* — dispatch elements are
+``tokens * group_size * top_k * capacity_factor`` independent of E
+(DESIGN.md §5). Group size is per-arch (granite-moe's tiny d_ff needs small
+groups to keep dispatch FLOPs a small fraction of expert FLOPs).
+
+Dropped-token semantics: tokens over capacity fall through on the residual
+stream (standard GShard behavior).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.actctx import shard_act
+from .config import ModelConfig
+from .params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+
+    def w(shape, logical, **kw):
+        return ParamDef(shape=lead + shape, logical=lax_ + logical,
+                        dtype=cfg.jdtype, **kw)
+
+    return {
+        "router": w((D, E), ("embed_r", "experts"), scale=0.02),
+        "w_gate": w((E, D, F), ("experts", "embed", "mlp")),
+        "w_up": w((E, D, F), ("experts", "embed", "mlp")),
+        "w_down": w((E, F, D), ("experts", "mlp", "embed")),
+    }
+
+
+def capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, c + (-c) % 8)  # lane-friendly multiple of 8
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              drop: bool = True) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    ``drop=False`` (inference): capacity covers every routed token so the
+    result is independent of which other tokens share the group — required
+    for prefill/decode consistency (training keeps the capacity limit)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    Sg = min(cfg.moe_group_size, S)
+    if (B * S) % Sg:
+        Sg = S  # odd lengths (tests): one group per batch row
+    G = (B * S) // Sg
+    if drop:
+        C = capacity(cfg, Sg)
+    else:
+        c = Sg * cfg.top_k
+        C = max(8, c + (-c) % 8)
+    xg = x.reshape(G, Sg, D)
+
+    # --- routing (f32 for a stable softmax/top-k) ---
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gate_vals, gate_idx = jax.lax.top_k(logits, K)          # (G, Sg, K)
+    probs = jax.nn.softmax(gate_vals, axis=-1)              # (G, Sg, K)
+    eoh = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)    # (G, Sg, K, E)
+
+    # --- position within expert, s-major then k-major priority ---
+    flat = eoh.reshape(G, Sg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # 0-based slots
+    pos = pos.reshape(G, Sg, K, E)
+    in_cap = (pos < C).astype(jnp.float32)
+    slot = jnp.einsum("gske,gske->gsk", pos, eoh)           # chosen slot id
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), C,
+                             dtype=jnp.float32)             # (G, Sg, K, C)
+
+    # combine[g,s,e,c] = prob of (token s -> expert e at slot c), 0 if dropped
+    kept = eoh * in_cap                                     # (G, Sg, K, E)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", kept, slot_oh, probs)
+    dispatch = (combine > 0.0).astype(x.dtype)              # (G, Sg, E, C)
+
+    # --- expert FFN over capacity-packed tokens ---
+    ein = shard_act(jnp.einsum("gsec,gsd->gecd", dispatch, xg),
+                    ("batch", None, None, "act_embed"))     # (G, E, C, D)
+    h_g = jax.nn.silu(shard_act(
+        jnp.einsum("gecd,edf->gecf", ein, p["w_gate"]),
+        ("batch", None, None, "mlp")))
+    h_u = shard_act(jnp.einsum("gecd,edf->gecf", ein, p["w_up"]),
+                    ("batch", None, None, "mlp"))
+    out_e = shard_act(jnp.einsum("gecf,efd->gecd", h_g * h_u, p["w_down"]),
+                      ("batch", None, None, "act_embed"))
+
+    # --- weighted un-dispatch ---
+    y = jnp.einsum("gecd,gsec->gsd", out_e,
+                   combine.astype(out_e.dtype))
+    return shard_act(y.reshape(B, S, D),
+                     ("batch", "act_seq", "act_embed"))
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fraction * probability)."""
+    B, S, D = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B, S, E)
+    _, idx = jax.lax.top_k(logits, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * mean_prob)

@@ -1,0 +1,107 @@
+"""Parameter-definition framework: one source of truth for shapes, logical
+sharding axes, and initializers.
+
+Every model declares its parameters as a nested tree of :class:`ParamDef`.
+From that single tree we derive:
+  * ``materialize``  — real arrays (smoke tests, the 100M training example);
+  * ``shape_tree``   — ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod
+    dry-run lowers against these; nothing is ever allocated);
+  * ``spec_tree``    — ``PartitionSpec`` per leaf, resolved from logical axis
+    names via :class:`repro.distributed.sharding.ShardingRules` with
+    divisibility-aware fallback (an axis that does not divide by its mesh
+    axis size is replicated instead — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any  # nested dict of ParamDef / arrays / ShapeDtypeStruct / specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]     # logical axis name per dim
+    init: str = "normal"                # normal | zeros | ones | embed
+    scale: float | None = None          # stddev override (default: fan-in)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical}")
+
+
+def _map_tree(fn: Callable[[str, ParamDef], Any], tree: Tree,
+              path: str = "") -> Tree:
+    if isinstance(tree, ParamDef):
+        return fn(path, tree)
+    if isinstance(tree, Mapping):
+        return {k: _map_tree(fn, v, f"{path}/{k}") for k, v in tree.items()}
+    raise TypeError(f"unexpected node at {path!r}: {type(tree)}")
+
+
+def _fan_in(defn: ParamDef) -> float:
+    # For >=2D weights treat all but the last dim as fan-in (our weights are
+    # stored (in_dims..., out_dims...) with contraction dims leading).
+    if len(defn.shape) < 2:
+        return 1.0
+    fan = 1.0
+    for d in defn.shape[:-1]:
+        fan *= d
+    return max(fan, 1.0)
+
+
+def _leaf_key(root: jax.Array, path: str) -> jax.Array:
+    digest = int.from_bytes(
+        hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, digest)
+
+
+def materialize(key: jax.Array, defs: Tree) -> Tree:
+    """Initialize real parameter arrays from the definition tree."""
+
+    def init_leaf(path: str, d: ParamDef) -> jax.Array:
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        scale = d.scale if d.scale is not None else _fan_in(d) ** -0.5
+        if d.init == "embed":
+            scale = d.scale if d.scale is not None else 1.0
+        x = jax.random.normal(_leaf_key(key, path), d.shape, jnp.float32)
+        return (x * scale).astype(d.dtype)
+
+    return _map_tree(init_leaf, defs)
+
+
+def shape_tree(defs: Tree) -> Tree:
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+    return _map_tree(lambda _, d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def logical_tree(defs: Tree) -> Tree:
+    """The logical-axes tree, same structure as the params."""
+    return _map_tree(lambda _, d: d.logical, defs)
+
+
+def n_params(defs: Tree) -> int:
+    total = 0
+
+    def count(_, d: ParamDef):
+        nonlocal total
+        size = 1
+        for s in d.shape:
+            size *= s
+        total += size
+        return None
+
+    _map_tree(count, defs)
+    return total

@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW + LR schedules (cosine, MiniCPM's WSD)."""
+
+from .adamw import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                    opt_state_defs)
+from .schedules import cosine_schedule, make_schedule, wsd_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "make_schedule", "opt_state_defs", "wsd_schedule"]

@@ -1,0 +1,86 @@
+"""AdamW with f32 moments, global-norm clipping, decoupled weight decay.
+
+Moment tensors reuse the parameter ParamDef tree (same shapes + logical
+axes) so they shard identically to the params — with the FSDP "embed" rule
+this is ZeRO-sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import params as params_lib
+from ..models.params import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def opt_state_defs(defs: Any) -> dict:
+    """ParamDef tree for the optimizer state (m, v in f32, + step count)."""
+
+    def f32_def(_, d: ParamDef) -> ParamDef:
+        return ParamDef(shape=d.shape, logical=d.logical, init="zeros",
+                        dtype=jnp.float32)
+
+    return {
+        "m": params_lib._map_tree(f32_def, defs),
+        "v": params_lib._map_tree(f32_def, defs),
+        "count": ParamDef(shape=(), logical=(), init="zeros",
+                          dtype=jnp.float32),
+    }
+
+
+def adamw_init(defs: Any) -> dict:
+    return params_lib.materialize(jax.random.key(0), opt_state_defs(defs))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, opt_state: dict, lr: jax.Array,
+                 cfg: AdamWConfig = AdamWConfig()) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = opt_state["count"] + 1.0
+    b1c = 1.0 - cfg.b1 ** count
+    b2c = 1.0 - cfg.b2 ** count
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pn, mn, vn = upd(p, g, m, v)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "count": count},
+            metrics)

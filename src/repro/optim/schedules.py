@@ -1,0 +1,56 @@
+"""Learning-rate schedules.
+
+``wsd_schedule`` is the MiniCPM Warmup-Stable-Decay schedule
+(arXiv:2404.06395): linear warmup, long flat stable phase, short
+exponential-ish decay tail — assigned to minicpm-2b.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def cosine_schedule(peak_lr: float, total_steps: int,
+                    warmup_steps: int = 100,
+                    min_ratio: float = 0.1) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def wsd_schedule(peak_lr: float, total_steps: int, warmup_steps: int = 100,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01) -> Schedule:
+    """Warmup -> stable plateau -> fast decay over the last ``decay_frac``."""
+
+    decay_steps = max(1, int(total_steps * decay_frac))
+    decay_start = total_steps - decay_steps
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        decay_t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        # exponential decay to min_ratio over the tail
+        decay = jnp.exp(jnp.log(min_ratio) * decay_t)
+        val = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, 1.0, decay))
+        return peak_lr * val
+
+    return fn
+
+
+def make_schedule(kind: str, peak_lr: float, total_steps: int,
+                  warmup_steps: int = 100) -> Schedule:
+    if kind == "wsd":
+        return wsd_schedule(peak_lr, total_steps, warmup_steps)
+    return cosine_schedule(peak_lr, total_steps, warmup_steps)

@@ -1,0 +1,6 @@
+"""Training/serving step construction (pjit-ready, mesh-aware)."""
+
+from .steps import StepBundle, build_decode_step, build_prefill_step, build_train_step
+
+__all__ = ["StepBundle", "build_decode_step", "build_prefill_step",
+           "build_train_step"]

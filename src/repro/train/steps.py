@@ -1,0 +1,244 @@
+"""Step builders: bind (model config × workload shape × mesh × sharding
+rules × execution knobs) into a jit-able function plus its sharding and
+abstract-input trees.
+
+The same bundles serve three consumers:
+  * ``launch/dryrun.py``  — ``jit(fn, in_shardings).lower(abstract).compile()``
+  * ``launch/train.py``   — real training on the host mesh
+  * ``benchmarks``        — step-level wall-clock objectives for the tuner
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import sharding as sh
+from ..distributed.actctx import activation_sharding
+from ..models import api
+from ..models import layers as layers_lib
+from ..models import params as params_lib
+from ..models.config import (ModelConfig, WorkloadShape, cache_len,
+                             input_specs)
+from ..models.transformer import StepConfig
+from ..optim import AdamWConfig, adamw_update, make_schedule, opt_state_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything needed to lower/execute one step function."""
+
+    fn: Callable
+    abstract_args: tuple           # ShapeDtypeStruct pytrees, in order
+    in_shardings: tuple            # NamedSharding pytrees, same order
+    out_shardings: Any             # sharding pytree (or None leaves)
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh: Mesh, spec_tree_: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree_,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+                     rules: sh.ShardingRules) -> dict:
+    specs = {}
+    inputs = input_specs(cfg, shape)
+    for name, sds in inputs.items():
+        logical = ("batch",) + (None,) * (len(sds.shape) - 1)
+        specs[name] = sh.logical_to_spec(logical, sds.shape, rules, mesh)
+    return _named(mesh, specs)
+
+
+def _resolver(mesh: Mesh, rules: sh.ShardingRules):
+    """Logical-axes -> NamedSharding resolver for activation constraints."""
+
+    def resolve(logical, shape):
+        spec = sh.logical_to_spec(logical, shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return resolve
+
+
+def _cache_shardings(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+                     rules: sh.ShardingRules) -> Any:
+    shapes = api.cache_shapes(cfg, shape)
+    logical = api.cache_logical(cfg)
+
+    def walk(shape_node, logical_node):
+        if isinstance(shape_node, dict):
+            return {k: walk(shape_node[k], logical_node[k])
+                    for k in shape_node}
+        return NamedSharding(mesh, sh.logical_to_spec(
+            logical_node, shape_node.shape, rules, mesh))
+
+    return walk(shapes, logical)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+                     rules: Optional[sh.ShardingRules] = None,
+                     step_cfg: StepConfig = StepConfig(),
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     peak_lr: float = 3e-4, total_steps: int = 10_000,
+                     ) -> StepBundle:
+    rules = rules or sh.TRAIN_RULES
+    defs = api.param_defs(cfg)
+    opt_defs = opt_state_defs(defs)
+    schedule = make_schedule(cfg.lr_schedule, peak_lr, total_steps)
+    k = step_cfg.microbatches
+
+    def train_step(params, opt_state, batch, step_idx):
+        with activation_sharding(_resolver(mesh, rules)):
+            return _train_step(params, opt_state, batch, step_idx)
+
+    def _train_step(params, opt_state, batch, step_idx):
+        def loss_of(p, b):
+            return api.loss_fn(p, b, cfg, step_cfg)
+
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def micro(accum, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return jax.tree.map(jnp.add, accum,
+                                    {"l": l, "g": g}), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+            zero = {"l": jnp.zeros((), jnp.float32),
+                    "g": jax.tree.map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+            accum, _ = layers_lib.xscan(micro, zero, mbs)
+            loss = accum["l"] / k
+            grads = jax.tree.map(lambda g: g / k, accum["g"])
+        if step_cfg.grad_bf16:
+            # halve gradient-sync traffic; Adam moments stay f32
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        lr = schedule(step_idx)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  lr, opt_cfg)
+        metrics = {"loss": loss, **metrics}
+        return params, opt_state, metrics
+
+    param_shapes = params_lib.shape_tree(defs)
+    opt_shapes = params_lib.shape_tree(opt_defs)
+    param_shard = sh.sharding_tree(defs, rules, mesh)
+    opt_shard = sh.sharding_tree(opt_defs, rules, mesh)
+    batch_shapes = input_specs(cfg, shape)
+    batch_shard = _batch_shardings(cfg, shape, mesh, rules)
+    idx_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_shard = NamedSharding(mesh, P())
+    metric_shard = {"loss": idx_shard, "grad_norm": idx_shard,
+                    "lr": idx_shard}
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(param_shapes, opt_shapes, batch_shapes, idx_shape),
+        in_shardings=(param_shard, opt_shard, batch_shard, idx_shard),
+        out_shardings=(param_shard, opt_shard, metric_shard),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+                       rules: Optional[sh.ShardingRules] = None,
+                       step_cfg: StepConfig = StepConfig()) -> StepBundle:
+    rules = rules or sh.SERVE_RULES
+    defs = api.param_defs(cfg)
+
+    def prefill_step(params, batch):
+        with activation_sharding(_resolver(mesh, rules)):
+            return api.prefill_fn(params, batch, cfg, step_cfg)
+
+    param_shapes = params_lib.shape_tree(defs)
+    param_shard = sh.sharding_tree(defs, rules, mesh)
+    batch_shapes = input_specs(cfg, shape)
+    batch_shard = _batch_shardings(cfg, shape, mesh, rules)
+    logits_shard = NamedSharding(mesh, sh.logical_to_spec(
+        ("batch", None, "vocab"),
+        (shape.global_batch, 1, cfg.vocab_padded), rules, mesh))
+    cache_shard = _cache_shardings(cfg, shape, mesh, rules)
+    return StepBundle(
+        fn=prefill_step,
+        abstract_args=(param_shapes, batch_shapes),
+        in_shardings=(param_shard, batch_shard),
+        out_shardings=(logits_shard, cache_shard),
+    )
+
+
+def build_decode_step(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+                      rules: Optional[sh.ShardingRules] = None,
+                      step_cfg: StepConfig = StepConfig()) -> StepBundle:
+    rules = rules or sh.SERVE_RULES
+    defs = api.param_defs(cfg)
+
+    def decode_step(params, batch, cache, pos):
+        with activation_sharding(_resolver(mesh, rules)):
+            return api.decode_fn(params, batch, cache, pos, cfg, step_cfg)
+
+    param_shapes = params_lib.shape_tree(defs)
+    param_shard = sh.sharding_tree(defs, rules, mesh)
+    batch_shapes = input_specs(cfg, shape)
+    batch_shard = _batch_shardings(cfg, shape, mesh, rules)
+    cache_shapes_ = api.cache_shapes(cfg, shape)
+    cache_shard = _cache_shardings(cfg, shape, mesh, rules)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    logits_shard = NamedSharding(mesh, sh.logical_to_spec(
+        ("batch", None, "vocab"),
+        (shape.global_batch, 1, cfg.vocab_padded), rules, mesh))
+    return StepBundle(
+        fn=decode_step,
+        abstract_args=(param_shapes, batch_shapes, cache_shapes_, pos_shape),
+        in_shardings=(param_shard, batch_shard, cache_shard, pos_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(2,),
+    )
+
+
+def default_step_cfg(cfg: ModelConfig, shape: WorkloadShape) -> StepConfig:
+    """Per-arch execution defaults: large models accumulate gradients over
+    microbatches to bound the per-layer residual stacks (§Perf)."""
+    if shape.kind == "train" and cfg.n_params() > 10e9:
+        return StepConfig(microbatches=4)
+    return StepConfig()
+
+
+def build_step(cfg: ModelConfig, shape: WorkloadShape, mesh: Mesh,
+               rules: Optional[sh.ShardingRules] = None,
+               step_cfg: Optional[StepConfig] = None) -> StepBundle:
+    """Dispatch on the workload kind (train/prefill/decode)."""
+    if step_cfg is None:
+        step_cfg = default_step_cfg(cfg, shape)
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, rules, step_cfg)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, rules, step_cfg)
+    return build_decode_step(cfg, shape, mesh, rules, step_cfg)

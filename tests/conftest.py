@@ -1,0 +1,14 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the host's real (single) device; only launch/dryrun.py forces the
+512-device placeholder topology (and tests exercise it via subprocess)."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(20210416)  # paper-era seed

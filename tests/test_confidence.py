@@ -1,0 +1,80 @@
+"""Confidence intervals: quantile accuracy, coverage, robust variants."""
+
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+import repro.core.welford as W
+from repro.core import confidence as C
+
+
+def test_normal_quantile_known_values():
+    assert abs(C.normal_quantile(0.975) - 1.959964) < 1e-5
+    assert abs(C.normal_quantile(0.995) - 2.575829) < 1e-5
+    assert abs(C.normal_quantile(0.5)) < 1e-9
+    assert abs(C.normal_quantile(0.025) + 1.959964) < 1e-5
+
+
+def test_t_quantile_known_values():
+    # scipy.stats.t.ppf references
+    assert abs(C.t_quantile(0.975, 10) - 2.2281389) < 1e-5
+    assert abs(C.t_quantile(0.995, 5) - 4.0321430) < 1e-5
+    assert abs(C.t_quantile(0.975, 1) - 12.7062047) < 1e-4
+    assert abs(C.t_quantile(0.975, 1e7) - 1.959964) < 1e-4
+
+
+@hypothesis.given(st.floats(0.01, 0.99), st.integers(2, 200))
+@hypothesis.settings(deadline=None, max_examples=100)
+def test_t_quantile_inverts_cdf(p, df):
+    t = C.t_quantile(p, df)
+    assert abs(C.t_cdf(t, df) - p) < 1e-7
+
+
+def test_ci_mean_coverage(rng):
+    """~99% of 99% CIs should contain the true mean (normal data)."""
+    hits = 0
+    trials = 400
+    for _ in range(trials):
+        xs = rng.normal(10.0, 2.0, size=40)
+        interval = C.ci_mean(W.from_samples(xs), confidence=0.99)
+        hits += interval.lo <= 10.0 <= interval.hi
+    assert hits / trials >= 0.95  # loose lower bound, 99% nominal
+
+
+def test_ci_margin_shrinks_with_n(rng):
+    xs = rng.normal(5.0, 1.0, size=1000)
+    m_small = C.ci_mean(W.from_samples(xs[:10])).margin
+    m_large = C.ci_mean(W.from_samples(xs)).margin
+    assert m_large < m_small
+
+
+def test_interval_relative_margin():
+    i = C.Interval(lo=9.0, hi=11.0, mean=10.0)
+    assert abs(i.margin - 1.0) < 1e-12
+    assert abs(i.relative_margin - 0.1) < 1e-12
+
+
+def test_reservoir_bootstrap_ci(rng):
+    boot = C.ReservoirBootstrap(capacity=128, resamples=200, seed=1)
+    for x in rng.normal(7.0, 1.0, size=5000):
+        boot.update(float(x))
+    interval = boot.ci_mean(0.99)
+    assert boot.count == 5000
+    assert interval.lo <= 7.0 <= interval.hi
+    assert interval.hi - interval.lo < 1.0
+
+
+def test_median_of_means_robust_to_outliers(rng):
+    xs = list(rng.normal(3.0, 0.1, size=64)) + [1e6]
+    assert abs(C.median_of_means(xs, n_blocks=8) - 3.0) < 1.0
+    assert abs(np.mean(xs) - 3.0) > 100  # plain mean is destroyed
+
+
+def test_sign_test_median_ci(rng):
+    xs = rng.normal(2.0, 1.0, size=100)
+    interval = C.sign_test_median_ci(xs, confidence=0.99)
+    assert interval.lo <= 2.0 <= interval.hi
+    assert interval.lo > -math.inf

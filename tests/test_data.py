@@ -1,0 +1,53 @@
+"""Data pipeline: determinism, resumability, structure."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLM
+
+
+def test_batch_is_pure_function_of_step():
+    p1 = SyntheticLM(DataConfig(seed=3, vocab_size=100), batch=4, seq_len=32)
+    p2 = SyntheticLM(DataConfig(seed=3, vocab_size=100), batch=4, seq_len=32)
+    b1 = p1.batch_at(17)["tokens"]
+    b2 = p2.batch_at(17)["tokens"]
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_different_steps_differ():
+    p = SyntheticLM(DataConfig(seed=3, vocab_size=100), batch=4, seq_len=32)
+    a = np.asarray(p.batch_at(0)["tokens"])
+    b = np.asarray(p.batch_at(1)["tokens"])
+    assert (a != b).any()
+
+
+def test_tokens_in_vocab_range():
+    p = SyntheticLM(DataConfig(seed=0, vocab_size=50), batch=8, seq_len=64)
+    t = np.asarray(p.batch_at(5)["tokens"])
+    assert t.min() >= 0 and t.max() < 50
+    assert t.shape == (8, 64)
+
+
+def test_markov_structure_is_learnable():
+    """With structure=1.0 every next token is succ(prev): the bigram is
+    deterministic, so an LM can reach ~0 loss — verify the property."""
+    cfg = DataConfig(seed=1, vocab_size=64, structure=1.0)
+    p = SyntheticLM(cfg, batch=2, seq_len=128)
+    t = np.asarray(p.batch_at(0)["tokens"])
+    succ = np.asarray(p._succ)
+    follows = (t[:, 1:] == succ[t[:, :-1]]).mean()
+    assert follows == 1.0
+
+
+def test_sharded_batch_matches_shape():
+    from jax.sharding import PartitionSpec as P
+    from repro.data import make_batch_sharded
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    p = SyntheticLM(DataConfig(seed=0, vocab_size=100),
+                    batch=4 * mesh.shape["data"], seq_len=16)
+    batch = make_batch_sharded(p, 3, mesh, P("data", None))
+    assert batch["tokens"].shape == (4 * mesh.shape["data"], 16)
+    t = np.asarray(batch["tokens"])
+    assert t.min() >= 0 and t.max() < 100

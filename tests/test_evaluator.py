@@ -1,0 +1,106 @@
+"""Two-level evaluation process (paper Fig. 2)."""
+
+import numpy as np
+import pytest
+
+from repro.core.evaluator import EvaluationSettings, Evaluator, timed_sampler
+from repro.core.stop_conditions import Direction
+
+
+def gaussian_bench(mu, sigma, rng):
+    def factory():
+        def sample():
+            return float(rng.normal(mu, sigma))
+        return sample
+    return factory
+
+
+def test_default_runs_fixed_budget(rng):
+    s = EvaluationSettings(max_invocations=3, max_iterations=50,
+                           max_time_s=60.0)
+    r = Evaluator(s).evaluate(gaussian_bench(10, 0.5, rng))
+    assert r.total_samples == 150            # 3 x 50, no early stop
+    assert len(r.invocations) == 3
+    assert abs(r.score - 10.0) < 0.5
+    assert not r.pruned
+
+
+def test_label():
+    base = EvaluationSettings()
+    assert base.label() == "Default"
+    assert EvaluationSettings(use_ci_convergence=True).label() == "C"
+    assert EvaluationSettings(use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True).label() == "C+I+O"
+
+
+def test_ci_convergence_stops_early(rng):
+    s = EvaluationSettings(max_invocations=3, max_iterations=500,
+                           max_time_s=60.0, use_ci_convergence=True)
+    r = Evaluator(s).evaluate(gaussian_bench(10, 0.01, rng))
+    assert r.total_samples < 150             # terminates well before cap
+    assert abs(r.score - 10.0) < 0.1
+
+
+def test_inner_prune_kills_doomed_configs(rng):
+    s = EvaluationSettings(max_invocations=3, max_iterations=500,
+                           use_ci_convergence=True, use_inner_prune=True)
+    r = Evaluator(s).evaluate(gaussian_bench(5, 0.1, rng), incumbent=50.0)
+    assert r.pruned
+    assert r.total_samples <= 10             # dies after min_count samples
+
+
+def test_pruning_respects_direction(rng):
+    s = EvaluationSettings(max_invocations=2, max_iterations=100,
+                           use_ci_convergence=True, use_inner_prune=True,
+                           direction=Direction.MINIMIZE)
+    # incumbent time 1.0s; candidate at 5.0s must be pruned
+    r = Evaluator(s).evaluate(gaussian_bench(5.0, 0.05, rng), incumbent=1.0)
+    assert r.pruned
+
+
+def test_timed_sampler_returns_rate():
+    ticks = iter([0.0, 0.5])
+    sample = timed_sampler(lambda: None, work=100.0,
+                           clock=lambda: next(ticks))
+    assert abs(sample() - 200.0) < 1e-6      # 100 units / 0.5 s
+
+
+def test_high_variance_hits_max_count(rng):
+    s = EvaluationSettings(max_invocations=1, max_iterations=30,
+                           max_time_s=60.0, use_ci_convergence=True)
+    r = Evaluator(s).evaluate(gaussian_bench(10, 8.0, rng))
+    assert r.invocations[0].count == 30
+    assert "max_count" in r.invocations[0].stop_reason
+
+
+@pytest.mark.parametrize("method", ["welford", "bootstrap", "median"])
+def test_ci_methods_converge(method, rng):
+    """Paper §VII future work: bootstrap and median stop statistics are
+    drop-in CI methods — all converge to the same answer on clean data."""
+    s = EvaluationSettings(max_invocations=2, max_iterations=300,
+                           use_ci_convergence=True, ci_method=method,
+                           rel_margin=0.02)
+    r = Evaluator(s).evaluate(gaussian_bench(10.0, 0.3, rng))
+    assert abs(r.score - 10.0) < 0.3
+    assert r.total_samples < 600  # converged before the cap
+
+
+def test_median_method_robust_to_outliers(rng):
+    """The median CI ignores rare spikes that wreck the normal CI width."""
+    def factory():
+        state = {"i": 0}
+
+        def sample():
+            state["i"] += 1
+            if state["i"] % 50 == 0:
+                return 1000.0            # rare scheduler spike
+            return float(rng.normal(10.0, 0.2))
+        return sample
+
+    s = EvaluationSettings(max_invocations=1, max_iterations=300,
+                           use_ci_convergence=True, ci_method="median",
+                           rel_margin=0.02)
+    r = Evaluator(s).evaluate(factory)
+    # the mean-based score is pulled by spikes, but convergence was reached
+    # by the median CI rather than the (noisy) normal CI
+    assert "ci_converged" in r.invocations[0].stop_reason

@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced same-family configs, one train
+step on CPU, shape + finiteness asserts, prefill/decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+from repro.models import params as P
+from repro.models.config import WorkloadShape
+from repro.models.transformer import StepConfig
+
+STEP = StepConfig(remat=False, loss_chunk=8)
+B, S = 2, 16
+
+
+def make_batch(cfg, seq=S):
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(key, (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_frames, cfg.d_enc),
+            cfg.jdtype)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_image_tokens, cfg.d_model),
+            cfg.jdtype)
+    return batch
+
+
+@pytest.fixture(scope="module", params=configs.ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def test_exact_assigned_config_values():
+    """The full configs must match the assignment table exactly."""
+    c = configs.get("command_r_plus_104b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 12288, 96, 8, 33792, 256000)
+    c = configs.get("granite_3_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 2048, 32, 8, 8192, 49155)
+    c = configs.get("minicpm_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 2304, 36, 36, 5760, 122753)
+    assert c.lr_schedule == "wsd"
+    c = configs.get("gemma_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.head_dim) == (18, 2048, 8, 1, 16384, 256000, 256)
+    assert c.act == "gelu"
+    c = configs.get("whisper_base")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.n_heads, c.d_ff,
+            c.vocab_size) == (6, 6, 512, 8, 2048, 51865)
+    c = configs.get("granite_moe_1b_a400m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == (24, 1024, 16, 8, 512,
+                                                    49155, 32, 8)
+    c = configs.get("mixtral_8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == (56, 6144, 48, 8, 16384,
+                                                    32768, 8, 2)
+    assert c.window is not None
+    c = configs.get("llama_3_2_vision_11b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 8, 14336, 128256)
+    c = configs.get("mamba2_130m")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state) == (24, 768,
+                                                                  50280, 128)
+    c = configs.get("zamba2_2_7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.ssm_state) == (54, 2560, 32, 10240, 32000, 64)
+
+
+def test_train_step_smoke(arch):
+    """One forward/backward on the reduced config: finite loss + grads,
+    correct logits shapes."""
+    cfg = configs.get_smoke(arch)
+    p = P.materialize(jax.random.key(0), api.param_defs(cfg))
+    batch = make_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda pp: api.loss_fn(pp, batch, cfg, STEP)))(p)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32)))
+               for g in leaves)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves)
+
+
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced decode from a prefilled cache must reproduce the
+    full-sequence forward logits position by position."""
+    cfg = configs.get_smoke(arch)
+    p = P.materialize(jax.random.key(0), api.param_defs(cfg))
+    batch = make_batch(cfg, seq=S)
+    n_prefill, n_decode = 8, 4
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :n_prefill]
+    logits_p, cache = jax.jit(
+        lambda pp, bb: api.prefill_fn(pp, bb, cfg, STEP))(p, pre)
+    cache = api.extend_cache(cache, n_decode)
+
+    # reference: full forward logits at each position
+    full = dict(batch)
+    full["tokens"] = batch["tokens"][:, :n_prefill + n_decode]
+    ref_logits, _ = jax.jit(
+        lambda pp, bb: api.prefill_fn(pp, bb, cfg, STEP))(p, full)
+
+    step_logits = None
+    for t in range(n_prefill, n_prefill + n_decode):
+        dec = dict(batch)
+        dec["tokens"] = batch["tokens"][:, t:t + 1]
+        step_logits, cache = jax.jit(
+            lambda pp, bb, cc, pos: api.decode_fn(pp, bb, cc, pos, cfg,
+                                                  STEP))(
+            p, dec, cache, jnp.int32(t))
+    # compare final decode logits to the full forward's last position
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0], np.float32),
+        np.asarray(ref_logits[:, 0], np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_param_count_scales(arch):
+    """Full config param count is positive and far larger than smoke."""
+    full = configs.get(arch)
+    smoke = configs.get_smoke(arch)
+    n_full = full.n_params()
+    assert n_full > 50 * P.n_params(api.param_defs(smoke))
+    assert full.n_active_params() <= n_full
+
+
+def test_full_param_counts_plausible():
+    """Sanity against the advertised model sizes (±40%; embeddings and our
+    simplifications account for slack)."""
+    expect = {
+        "command_r_plus_104b": 104e9,
+        "mixtral_8x22b": 141e9,
+        "granite_3_2b": 2.5e9,
+        "gemma_2b": 2.5e9,
+        "minicpm_2b": 2.7e9,
+        "llama_3_2_vision_11b": 10e9,
+        "mamba2_130m": 0.13e9,
+        "zamba2_2_7b": 2.7e9,
+    }
+    for arch, n in expect.items():
+        got = configs.get(arch).n_params()
+        assert 0.6 * n < got < 1.6 * n, (arch, got, n)

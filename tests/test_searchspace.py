@@ -1,0 +1,50 @@
+"""Search-space construction and reduction (paper Sec. IV)."""
+
+import pytest
+
+from repro.core.searchspace import (SearchSpace, doubling_from, grid, param,
+                                    powers_of_two)
+
+
+def test_paper_dgemm_cardinality():
+    """Reproduce the paper's Eq. 8 numbers: |S| = 7*7*11 = 539, reduced to
+    4*4*6 = 96."""
+    initial = grid(n=powers_of_two(64, 4096), m=powers_of_two(64, 4096),
+                   k=powers_of_two(2, 2048))
+    assert initial.raw_cardinality == 7 * 7 * 11 == 539
+    reduced = initial.narrow(n=powers_of_two(512, 4096),
+                             m=powers_of_two(512, 4096),
+                             k=powers_of_two(64, 2048))
+    assert reduced.raw_cardinality == 4 * 4 * 6 == 96
+
+
+def test_leading_dimension_adjustment():
+    """Paper Sec. IV-A: multiples of 2 instead of powers of 2."""
+    assert doubling_from(500, 4000) == (500, 1000, 2000, 4000)
+
+
+def test_constraints_filter():
+    space = grid(n=(1, 2, 3, 4), m=(1, 2, 3, 4))
+    square = space.constrain(lambda c: c["n"] == c["m"])
+    assert square.cardinality == 4
+    assert space.cardinality == 16
+
+
+def test_orders():
+    space = grid(x=(1, 2, 3))
+    assert [c["x"] for c in space.ordered("exhaustive")] == [1, 2, 3]
+    assert [c["x"] for c in space.ordered("reverse")] == [3, 2, 1]
+    shuffled = [c["x"] for c in space.ordered("random", seed=7)]
+    assert sorted(shuffled) == [1, 2, 3]
+    # determinism
+    assert shuffled == [c["x"] for c in space.ordered("random", seed=7)]
+
+
+def test_duplicate_param_values_rejected():
+    with pytest.raises(ValueError):
+        param("x", (1, 1))
+
+
+def test_narrow_unknown_param():
+    with pytest.raises(KeyError):
+        grid(x=(1,)).narrow(y=(2,))

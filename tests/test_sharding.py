@@ -1,0 +1,75 @@
+"""Sharding-rule resolution: divisibility fallback, axis consumption."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # host mesh: (data=n_devices, model=1)
+    return make_host_mesh(model=1)
+
+
+def test_divisible_dims_get_sharded(mesh):
+    n = mesh.shape["data"]
+    spec = sh.logical_to_spec(("batch", None), (4 * n, 7),
+                              sh.SERVE_RULES, mesh)
+    assert spec == P("data", None)
+
+
+def test_indivisible_dims_fall_back_to_replication(mesh):
+    n = mesh.shape["data"]
+    if n == 1:
+        pytest.skip("single-device mesh shards everything")
+    spec = sh.logical_to_spec(("batch",), (n + 1,), sh.SERVE_RULES, mesh)
+    assert spec == P(None)
+
+
+def test_axis_used_once(mesh):
+    """Two dims mapping to the same mesh axis: first one wins."""
+    rules = sh.ShardingRules(rules={"a": ("data",), "b": ("data",)})
+    n = mesh.shape["data"]
+    spec = sh.logical_to_spec(("a", "b"), (n, n), rules, mesh)
+    assert spec == P("data", None)
+
+
+def test_missing_mesh_axis_ignored(mesh):
+    rules = sh.ShardingRules(rules={"x": ("pod", "data")})
+    n = mesh.shape["data"]
+    spec = sh.logical_to_spec(("x",), (n,), rules, mesh)
+    assert spec == P("data")  # "pod" absent from host mesh -> skipped
+
+
+def test_multi_axis_dim():
+    """A dim divisible by the product of two axes gets both."""
+    import numpy as np
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = make_host_mesh(model=1)
+    rules = sh.ShardingRules(rules={"batch": ("data", "model")})
+    total = mesh.shape["data"] * mesh.shape["model"]
+    spec = sh.logical_to_spec(("batch",), (total * 2,), rules, mesh)
+    expected = [ax for ax in ("data", "model") if mesh.shape[ax] > 1] or None
+    # with model=1 mesh, only "data" participates meaningfully; both valid
+    assert spec[0] is not None
+
+
+def test_rules_replace():
+    new = sh.TRAIN_RULES.replace(act_seq=())
+    assert new.get("act_seq") == ()
+    assert sh.TRAIN_RULES.get("act_seq") == ("model",)
+
+
+def test_spec_tree_matches_defs(mesh):
+    from repro import configs
+    from repro.models import api
+    cfg = configs.get_smoke("granite_3_2b")
+    defs = api.param_defs(cfg)
+    specs = sh.spec_tree(defs, sh.TRAIN_RULES, mesh)
+    flat_d = jax.tree.leaves(defs, is_leaf=lambda x: hasattr(x, "logical"))
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_d) == len(flat_s)

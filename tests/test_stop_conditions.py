@@ -1,0 +1,85 @@
+"""Semantics of the paper's four stop conditions."""
+
+import math
+
+import pytest
+
+import repro.core.welford as W
+from repro.core.stop_conditions import (CIConverged, Direction, EvalContext,
+                                        MaxCount, MaxTime, UpperBoundPrune,
+                                        first_decision)
+
+
+def ctx(samples, elapsed=0.0, incumbent=None,
+        direction=Direction.MAXIMIZE):
+    state = W.from_samples(samples)
+    return EvalContext(welford=state, elapsed_s=elapsed,
+                       count=int(state.count), incumbent=incumbent,
+                       direction=direction)
+
+
+def test_max_time():
+    cond = MaxTime(10.0)
+    assert cond.check(ctx([1, 2], elapsed=5.0)) is None
+    assert cond.check(ctx([1, 2], elapsed=10.0)) is not None
+
+
+def test_max_count():
+    cond = MaxCount(3)
+    assert cond.check(ctx([1, 2])) is None
+    d = cond.check(ctx([1, 2, 3]))
+    assert d is not None and not d.pruned
+
+
+def test_ci_converged_low_variance():
+    cond = CIConverged(confidence=0.99, rel_margin=0.01, min_count=5)
+    # essentially zero variance -> converges immediately past min_count
+    assert cond.check(ctx([10.0] * 4)) is None          # below min_count
+    tight = [10.0, 10.001, 9.999, 10.0, 10.001, 10.0]
+    assert cond.check(ctx(tight)) is not None
+    noisy = [10.0, 14.0, 6.0, 11.0, 9.0, 13.0]
+    assert cond.check(ctx(noisy)) is None
+
+
+def test_upper_bound_prune_maximize():
+    """Paper Listing 1: break when mean + marg < best."""
+    cond = UpperBoundPrune(confidence=0.99, min_count=2)
+    doomed = [5.0, 5.1, 4.9, 5.0, 5.05]
+    d = cond.check(ctx(doomed, incumbent=10.0))
+    assert d is not None and d.pruned
+    # competitive configuration must NOT be pruned
+    close = [9.9, 10.1, 10.0, 9.95]
+    assert cond.check(ctx(close, incumbent=10.0)) is None
+    # no incumbent -> never prune
+    assert cond.check(ctx(doomed, incumbent=None)) is None
+
+
+def test_upper_bound_prune_minimize():
+    cond = UpperBoundPrune(confidence=0.99, min_count=2)
+    doomed = [5.0, 5.1, 4.9]  # much SLOWER than incumbent 1.0 (minimize)
+    d = cond.check(ctx(doomed, incumbent=1.0,
+                       direction=Direction.MINIMIZE))
+    assert d is not None and d.pruned
+    winner = [0.5, 0.52, 0.48]
+    assert cond.check(ctx(winner, incumbent=1.0,
+                          direction=Direction.MINIMIZE)) is None
+
+
+def test_min_count_guard():
+    """The paper's guard for slow-warm-up configurations (min_count=100 on
+    the 2695v4)."""
+    cond = UpperBoundPrune(min_count=100)
+    doomed = [5.0] * 50
+    assert cond.check(ctx(doomed, incumbent=10.0)) is None
+
+
+def test_first_decision_order():
+    conds = [MaxTime(1.0), MaxCount(2)]
+    d = first_decision(conds, ctx([1, 2], elapsed=2.0))
+    assert "max_time" in d.reason
+
+
+def test_direction_better():
+    assert Direction.MAXIMIZE.better(2.0, 1.0)
+    assert Direction.MINIMIZE.better(1.0, 2.0)
+    assert not Direction.MAXIMIZE.better(1.0, 1.0)

@@ -1,0 +1,102 @@
+"""End-to-end autotuner behaviour: the paper's technique grid on synthetic
+objectives with known optima."""
+
+import numpy as np
+import pytest
+
+from repro.core.evaluator import EvaluationSettings
+from repro.core.searchspace import grid
+from repro.core.tuner import Tuner, compare_techniques
+
+
+def make_benchmark(rng, sigma=0.5):
+    """Objective: quadratic with optimum at x=7 (score 100)."""
+
+    def bench(cfg):
+        mu = 100.0 - (cfg["x"] - 7) ** 2
+
+        def factory():
+            def sample():
+                return float(rng.normal(mu, sigma))
+            return sample
+
+        return factory
+
+    return bench
+
+
+BASE = EvaluationSettings(max_invocations=5, max_iterations=100,
+                          max_time_s=30.0)
+
+
+def test_all_techniques_find_optimum(rng):
+    space = grid(x=tuple(range(12)))
+    results = compare_techniques(space, make_benchmark(rng), BASE)
+    assert set(results) == {"Default", "Single", "Confidence", "C+Inner",
+                            "C+Inner+R", "C+I+Outer", "C+I+O+R"}
+    for label, tr in results.items():
+        assert tr.best_config == {"x": 7}, label
+
+
+def test_optimized_uses_fewer_samples(rng):
+    space = grid(x=tuple(range(12)))
+    results = compare_techniques(space, make_benchmark(rng), BASE)
+    default = results["Default"].total_samples
+    cio = results["C+I+Outer"].total_samples
+    assert default == 12 * 5 * 100           # fixed budget
+    assert cio < default / 5                  # order-of-magnitude reduction
+
+
+def test_result_error_below_paper_threshold(rng):
+    """Paper: optimized stop conditions reproduce the Default result with
+    <2% error."""
+    space = grid(x=tuple(range(12)))
+    results = compare_techniques(space, make_benchmark(rng), BASE)
+    ref = results["Default"].best_score
+    for label in ("Confidence", "C+Inner", "C+I+Outer"):
+        err = abs(results[label].best_score - ref) / ref
+        assert err < 0.02, (label, err)
+
+
+def test_pruning_count_increases_with_incumbent_quality(rng):
+    """Exhaustive order meets the optimum early (x=7 of 0..11), so most
+    later configs are pruned; reverse meets it late."""
+    space = grid(x=tuple(range(12)))
+    results = compare_techniques(space, make_benchmark(rng), BASE)
+    assert results["C+I+Outer"].n_pruned >= 1
+    # reversal: the first configs (x=11, 10, 9, 8) are evaluated in full
+    # until x=7 is seen; pruning still happens after
+    assert results["C+I+O+R"].n_pruned >= 1
+
+
+def test_progress_callback(rng):
+    space = grid(x=(1, 2))
+    seen = []
+    tuner = Tuner(space, BASE)
+    tuner.tune(make_benchmark(rng),
+               progress=lambda cfg, res: seen.append(cfg["x"]))
+    assert seen == [1, 2]
+
+
+def test_pruned_config_never_becomes_best(rng):
+    """A pruned evaluation must not override the incumbent (its score is a
+    truncated estimate)."""
+    space = grid(x=(7, 0))                    # optimum first, doomed second
+    s = EvaluationSettings(max_invocations=3, max_iterations=50,
+                           use_ci_convergence=True, use_inner_prune=True)
+    tr = Tuner(space, s).tune(make_benchmark(rng, sigma=0.1))
+    assert tr.best_config == {"x": 7}
+    assert tr.trials[1].result.pruned
+
+
+def test_successive_halving_finds_optimum(rng):
+    from repro.core.tuner import tune_successive_halving
+    space = grid(x=tuple(range(16)))
+    base = EvaluationSettings(max_time_s=30.0)
+    result = tune_successive_halving(space, make_benchmark(rng, sigma=0.2),
+                                     base, eta=4)
+    assert result.best_config == {"x": 7}
+    # halving touches every config cheaply, then narrows
+    full = 16 * 5 * 100
+    assert result.total_samples < full / 10
+    assert result.settings_label == "SuccessiveHalving"

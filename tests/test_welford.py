@@ -1,0 +1,76 @@
+"""Welford online moments: property tests against the two-pass oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.welford as W
+
+finite_floats = st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False, allow_infinity=False)
+
+
+@hypothesis.given(st.lists(finite_floats, min_size=2, max_size=200))
+@hypothesis.settings(deadline=None, max_examples=200)
+def test_welford_matches_two_pass(xs):
+    state = W.from_samples(xs)
+    arr = np.asarray(xs, dtype=np.float64)
+    assert state.count == len(xs)
+    np.testing.assert_allclose(state.mean, arr.mean(), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(state.variance, arr.var(ddof=1),
+                               rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(st.lists(finite_floats, min_size=2, max_size=100),
+                  st.lists(finite_floats, min_size=2, max_size=100))
+@hypothesis.settings(deadline=None, max_examples=200)
+def test_merge_is_exact(xs, ys):
+    """Chan et al. pairwise merge == folding the concatenated stream."""
+    merged = W.merge(W.from_samples(xs), W.from_samples(ys))
+    direct = W.from_samples(xs + ys)
+    np.testing.assert_allclose(merged.mean, direct.mean, rtol=1e-9, atol=1e-8)
+    np.testing.assert_allclose(merged.m2, direct.m2, rtol=1e-6, atol=1e-5)
+
+
+@hypothesis.given(st.lists(st.lists(finite_floats, min_size=1, max_size=30),
+                           min_size=1, max_size=8))
+@hypothesis.settings(deadline=None, max_examples=100)
+def test_tree_merge_matches_concat(chunks):
+    flat = [x for chunk in chunks for x in chunk]
+    if len(flat) < 2:
+        return
+    merged = W.tree_merge([W.from_samples(c) for c in chunks])
+    direct = W.from_samples(flat)
+    np.testing.assert_allclose(merged.mean, direct.mean, rtol=1e-9, atol=1e-8)
+    np.testing.assert_allclose(merged.variance, direct.variance,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_merge_identity():
+    a = W.from_samples([1.0, 2.0, 3.0])
+    m = W.merge(a, W.init())
+    assert m.count == 3 and abs(m.mean - 2.0) < 1e-12
+
+
+def test_batch_state_jit(rng):
+    xs = rng.normal(3.0, 1.5, size=512).astype(np.float32)
+    state = jax.jit(W.batch_state)(jnp.asarray(xs))
+    np.testing.assert_allclose(float(state.mean), xs.mean(), rtol=1e-5)
+    np.testing.assert_allclose(float(state.variance), xs.var(ddof=1),
+                               rtol=1e-4)
+
+
+def test_welford_inside_scan_matches_numpy(rng):
+    """The paper's use: updating inside a jitted loop."""
+    xs = jnp.asarray(rng.normal(size=100).astype(np.float32))
+
+    def body(c, x):
+        return W.update(c, x), None
+
+    state, _ = jax.lax.scan(body, W.WelfordState(jnp.zeros(()), jnp.zeros(()),
+                                                 jnp.zeros(())), xs)
+    np.testing.assert_allclose(float(state.mean), np.mean(np.asarray(xs)),
+                               rtol=1e-5)
