@@ -11,6 +11,7 @@ budgets.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -36,15 +37,25 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper Table I budgets (minutes -> ~1h)")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--resume", nargs="?", const=".tuning_sessions",
+                    default=None, metavar="DIR",
+                    help="persist tuning trials under DIR (default "
+                         ".tuning_sessions) and skip configs already "
+                         "evaluated by a previous --resume run")
     args = ap.parse_args()
     quick = not args.full
 
     print("name,us_per_call,derived")
     selected = {args.only: BENCHES[args.only]} if args.only else BENCHES
     for name, fn in selected.items():
+        kwargs = {"quick": quick}
+        # cache-aware benches opt in by taking a cache_dir kwarg
+        if (args.resume is not None
+                and "cache_dir" in inspect.signature(fn).parameters):
+            kwargs["cache_dir"] = args.resume
         t0 = time.perf_counter()
         try:
-            fn(quick=quick)
+            fn(**kwargs)
             emit(f"{name}/total", (time.perf_counter() - t0) * 1e6, "ok")
         except Exception as e:  # noqa: BLE001
             emit(f"{name}/total", (time.perf_counter() - t0) * 1e6,

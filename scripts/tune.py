@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Run or resume a named autotuning session from the command line.
+
+    PYTHONPATH=src python scripts/tune.py --session nightly-dgemm
+    PYTHONPATH=src python scripts/tune.py --session nightly-dgemm \
+        --backend thread:8 --order reverse --full
+
+Trials persist to ``<cache-dir>/<session>.jsonl`` keyed by (benchmark,
+config, hardware fingerprint); re-running the same session skips every
+completed config and warm-starts the incumbent from the best cached trial,
+so a killed run resumes exactly where it stopped. ``--fresh`` discards the
+session's cache first.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_REPO), str(_REPO / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import dataclasses  # noqa: E402
+
+from repro.core import (SerialBackend, SimulatedShardedBackend,  # noqa: E402
+                        ThreadPoolBackend, Tuner, TuningSession,
+                        hardware_fingerprint)
+
+
+def parse_backend(spec: str):
+    """'serial', 'thread:N', or 'simulated:N'."""
+    kind, _, arg = spec.partition(":")
+    n = int(arg) if arg else 4
+    if kind == "serial":
+        return SerialBackend()
+    if kind == "thread":
+        return ThreadPoolBackend(n)
+    if kind == "simulated":
+        return SimulatedShardedBackend(n)
+    raise argparse.ArgumentTypeError(
+        f"unknown backend {spec!r} (serial | thread[:N] | simulated[:N])")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--session", required=True,
+                    help="session name; trials persist under this name")
+    ap.add_argument("--benchmark", default="dgemm",
+                    choices=("dgemm", "triad"))
+    ap.add_argument("--backend", type=parse_backend, default=None,
+                    metavar="SPEC", help="serial | thread[:N] | simulated[:N]")
+    ap.add_argument("--order", default="exhaustive",
+                    choices=("exhaustive", "reverse", "random"))
+    ap.add_argument("--seed", type=int, default=None,
+                    help="shuffle seed for --order random")
+    ap.add_argument("--full", action="store_true",
+                    help="paper Table I budgets instead of quick budgets")
+    ap.add_argument("--cache-dir", default=".tuning_sessions")
+    ap.add_argument("--no-warm-start", action="store_true",
+                    help="do not seed the incumbent from cached trials")
+    ap.add_argument("--fresh", action="store_true",
+                    help="discard this session's cached trials first")
+    args = ap.parse_args()
+
+    from benchmarks.common import (dgemm_benchmark, dgemm_space,
+                                   paper_settings, triad_invocation_factory)
+
+    quick = not args.full
+    settings = dataclasses.replace(paper_settings(quick),
+                                   use_ci_convergence=True,
+                                   use_inner_prune=True,
+                                   use_outer_prune=True)
+    if args.benchmark == "dgemm":
+        space, benchmark = dgemm_space(quick), dgemm_benchmark
+    else:
+        from repro.core import grid
+        sizes = (2 ** 16, 2 ** 20, 2 ** 24) if quick else \
+            tuple(2 ** e for e in range(14, 28, 2))
+        space = grid(n_bytes=sizes)
+        benchmark = lambda cfg: triad_invocation_factory(cfg["n_bytes"])  # noqa: E731
+
+    cache_path = pathlib.Path(args.cache_dir) / f"{args.session}.jsonl"
+    if args.fresh and cache_path.exists():
+        cache_path.unlink()
+
+    tuner = Tuner(space, settings, order=args.order, seed=args.seed)
+    session = TuningSession(args.session, tuner, benchmark,
+                            cache_dir=args.cache_dir,
+                            warm_start=not args.no_warm_start,
+                            benchmark_name=args.benchmark)
+    print(f"session    : {args.session}  ({cache_path})")
+    print(f"fingerprint: {hardware_fingerprint()}")
+    print(f"space      : {space!r}  ({space.cardinality} configs)")
+    print(f"cached     : {len(session.cache)} trials "
+          f"({session.cache.n_stale} stale skipped)")
+
+    done = 0
+
+    def progress(cfg, res):
+        nonlocal done
+        done += 1
+        tag = "PRUNED" if res.pruned else f"{res.score:10.2f}"
+        print(f"  [{done:4d}/{space.cardinality}] {cfg} -> {tag} "
+              f"({res.stop_reason})")
+
+    result = session.run(backend=args.backend, progress=progress)
+    print(f"\nbest      : {result.best_config}  score={result.best_score}")
+    print(f"trials    : {len(result.trials)}  cached={result.n_cached}  "
+          f"pruned={result.n_pruned}  samples={result.total_samples}")
+    print(f"backend   : {result.backend}  workers={result.n_workers}  "
+          f"wall={result.parallel_time_s:.2f}s "
+          f"(serial-equivalent {result.serial_time_s:.2f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Version compatibility shims for the installed JAX.
+
+The repo targets the Pallas/TPU surface that keeps moving between JAX
+releases. Everything that touches a renamed or not-yet-existing API goes
+through this module so kernels and launch code stay version-agnostic:
+
+  * ``tpu_compiler_params(...)`` — jax >= 0.5 renamed
+    ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and 0.4.x has
+    only the former). Resolves whichever exists.
+  * ``make_mesh(shape, names)`` — ``jax.sharding.AxisType`` and the
+    ``axis_types=`` kwarg of ``jax.make_mesh`` only exist on jax >= 0.5;
+    on 0.4.x meshes are constructed without them (all axes default to
+    auto sharding there, which is the behavior we request anyway).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params", "make_mesh"]
+
+# Resolved once at import: the TPU compiler-params class under its current
+# name (jax >= 0.5: CompilerParams; jax 0.4.x: TPUCompilerParams).
+_TPU_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct Pallas TPU compiler params under whatever name this JAX
+    exposes them (e.g. ``tpu_compiler_params(dimension_semantics=(...))``)."""
+    if _TPU_COMPILER_PARAMS_CLS is None:
+        raise RuntimeError(
+            "this JAX exposes neither pltpu.CompilerParams nor "
+            "pltpu.TPUCompilerParams")
+    return _TPU_COMPILER_PARAMS_CLS(**kwargs)
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+    and hasattr(jax.sharding, "AxisType"))
+
+
+def make_mesh(axis_shapes: Sequence[int],
+              axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with all axes auto-sharded, on any supported JAX."""
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

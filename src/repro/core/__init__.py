@@ -3,11 +3,15 @@
 Public API re-exports. See DESIGN.md §2 for the layer map.
 """
 
+from .cache import TrialCache, TuningSession, config_key, hardware_fingerprint
 from .confidence import (Interval, ReservoirBootstrap, ci_mean,
                          median_of_means, normal_quantile,
                          sign_test_median_ci, t_quantile)
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
                         InvocationResult, timed_sampler)
+from .executor import (ExecutionBackend, ExecutionStats, IncumbentCell,
+                       SerialBackend, SimulatedShardedBackend,
+                       ThreadPoolBackend, TrialOutcome)
 from .roofline import (TPU_V5E, MachineSpec, RooflineModel, TRIAD_INTENSITY,
                        attainable, from_measurements, operational_intensity,
                        ridge_point)
@@ -21,10 +25,13 @@ from .tuner import (BenchmarkFactory, TrialRecord, Tuner, TuningResult,
 from .welford import WelfordState, from_samples, init, merge, tree_merge, update
 
 __all__ = [
+    "TrialCache", "TuningSession", "config_key", "hardware_fingerprint",
     "Interval", "ReservoirBootstrap", "ci_mean", "median_of_means",
     "normal_quantile", "sign_test_median_ci", "t_quantile",
     "EvalResult", "EvaluationSettings", "Evaluator", "InvocationResult",
     "timed_sampler",
+    "ExecutionBackend", "ExecutionStats", "IncumbentCell", "SerialBackend",
+    "SimulatedShardedBackend", "ThreadPoolBackend", "TrialOutcome",
     "TPU_V5E", "MachineSpec", "RooflineModel", "TRIAD_INTENSITY", "attainable",
     "from_measurements", "operational_intensity", "ridge_point",
     "Config", "Param", "SearchSpace", "doubling_from", "grid", "param",

@@ -1,0 +1,214 @@
+"""Persistent trial cache + resumable tuning sessions.
+
+Real kernel-tuner infrastructure never throws trial data away: a search
+interrupted at config 40/96 should restart at 41, and a nightly re-tune on
+identical hardware should reuse yesterday's measurements outright (cf.
+*Towards a Benchmarking Suite for Kernel Tuners*, arXiv:2303.08976). This
+module provides:
+
+  * :func:`hardware_fingerprint` — identifies the measurement substrate
+    (platform, device kinds/count, jax version). Trials recorded under a
+    different fingerprint are ignored on load: timings do not transfer
+    across hardware.
+  * :class:`TrialCache` — an append-only JSONL store keyed by
+    (benchmark name, canonical config). Each record round-trips the full
+    :class:`~repro.core.evaluator.EvalResult`, including every
+    invocation's Welford moments (count/mean/m2) *exactly* — JSON float
+    serialization uses ``repr`` so float64 survives bit-for-bit — which
+    keeps downstream parallel Welford merges exact across a resume.
+  * :class:`TuningSession` — a named run/resume wrapper: restarting a
+    killed session skips every already-evaluated config and warm-starts
+    the incumbent from the best cached trial so stop-condition-4 pruning
+    bites from trial 1.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Optional
+
+from .evaluator import EvalResult, InvocationResult
+from .searchspace import Config
+from .stop_conditions import Direction
+
+__all__ = ["TrialCache", "TuningSession", "config_key",
+           "hardware_fingerprint"]
+
+CACHE_VERSION = 1
+
+_FINGERPRINT: Optional[str] = None
+
+
+def hardware_fingerprint() -> str:
+    """Stable id of this measurement substrate. Computed lazily (touching
+    ``jax.devices()`` initializes the backend) and cached per process."""
+    global _FINGERPRINT
+    if _FINGERPRINT is None:
+        import jax
+        kinds = sorted({d.device_kind for d in jax.devices()})
+        _FINGERPRINT = (f"{jax.default_backend()}:{','.join(kinds)}"
+                        f":n{jax.device_count()}:jax-{jax.__version__}")
+    return _FINGERPRINT
+
+
+def config_key(config: Config) -> str:
+    """Canonical JSON key of a configuration (order-insensitive)."""
+    return json.dumps(config, sort_keys=True, separators=(",", ":"),
+                      default=str)
+
+
+def _result_to_json(result: EvalResult) -> dict:
+    return {
+        "score": result.score,
+        "best_invocation": result.best_invocation,
+        "total_samples": result.total_samples,
+        "total_time_s": result.total_time_s,
+        "measured_time_s": result.measured_time_s,
+        "pruned": result.pruned,
+        "stop_reason": result.stop_reason,
+        "invocations": [
+            {"mean": i.mean, "count": i.count, "elapsed_s": i.elapsed_s,
+             "stop_reason": i.stop_reason, "pruned": i.pruned, "m2": i.m2}
+            for i in result.invocations],
+    }
+
+
+def _result_from_json(d: dict) -> EvalResult:
+    return EvalResult(
+        score=d["score"],
+        best_invocation=d["best_invocation"],
+        invocations=tuple(InvocationResult(**inv)
+                          for inv in d["invocations"]),
+        total_samples=d["total_samples"],
+        total_time_s=d["total_time_s"],
+        measured_time_s=d["measured_time_s"],
+        pruned=d["pruned"],
+        stop_reason=d["stop_reason"])
+
+
+class TrialCache:
+    """Append-only JSONL store of evaluated trials.
+
+    Thread-safe: concurrent backends write through one lock, and every
+    record is flushed as a single line so a killed process loses at most
+    the trial in flight (a torn trailing line is tolerated on load).
+    """
+
+    def __init__(self, path: str | os.PathLike,
+                 fingerprint: Optional[str] = None):
+        self.path = Path(path)
+        self.fingerprint = fingerprint or hardware_fingerprint()
+        self._lock = threading.Lock()
+        # (benchmark, config_key) -> (config, EvalResult)
+        self._entries: dict[tuple[str, str], tuple[Config, EvalResult]] = {}
+        self.n_stale = 0   # records skipped on load (other hardware/version)
+        if self.path.exists():
+            self._load()
+
+    def _load(self) -> None:
+        with open(self.path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue   # torn trailing write from a killed run
+                if (rec.get("version") != CACHE_VERSION
+                        or rec.get("fingerprint") != self.fingerprint):
+                    self.n_stale += 1
+                    continue
+                key = (rec["benchmark"], config_key(rec["config"]))
+                self._entries[key] = (rec["config"],
+                                      _result_from_json(rec["result"]))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, benchmark: str, config: Config) -> Optional[EvalResult]:
+        with self._lock:
+            hit = self._entries.get((benchmark, config_key(config)))
+            return hit[1] if hit is not None else None
+
+    def put(self, benchmark: str, config: Config,
+            result: EvalResult) -> None:
+        rec = {"version": CACHE_VERSION, "fingerprint": self.fingerprint,
+               "benchmark": benchmark, "config": config,
+               "result": _result_to_json(result)}
+        line = json.dumps(rec, default=str)
+        with self._lock:
+            self._entries[(benchmark, config_key(config))] = (config, result)
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with open(self.path, "a", encoding="utf-8") as f:
+                f.write(line + "\n")
+
+    def best(self, benchmark: str, direction: Direction,
+             ) -> Optional[tuple[Config, float]]:
+        """Best non-pruned cached (config, score) for warm-starting the
+        incumbent. Pruned trials carry truncated estimates and never seed."""
+        with self._lock:
+            best: Optional[tuple[Config, float]] = None
+            for (bench, _), (cfg, res) in self._entries.items():
+                if bench != benchmark or res.pruned:
+                    continue
+                if best is None or direction.better(res.score, best[1]):
+                    best = (cfg, res.score)
+            return best
+
+    def bound(self, benchmark: str) -> "BoundCache":
+        return BoundCache(self, benchmark)
+
+
+class BoundCache:
+    """A :class:`TrialCache` view fixed to one benchmark name — the shape
+    ``Tuner.tune(cache=...)`` consumes."""
+
+    def __init__(self, cache: TrialCache, benchmark: str):
+        self.cache = cache
+        self.benchmark = benchmark
+
+    def get(self, config: Config) -> Optional[EvalResult]:
+        return self.cache.get(self.benchmark, config)
+
+    def put(self, config: Config, result: EvalResult) -> None:
+        self.cache.put(self.benchmark, config, result)
+
+    def best(self, direction: Direction) -> Optional[tuple[Config, float]]:
+        return self.cache.best(self.benchmark, direction)
+
+
+class TuningSession:
+    """A named, resumable tuning run.
+
+    ``run()`` executes the wrapped tuner with the session's cache: configs
+    already on disk are served from the cache (no re-evaluation), fresh
+    evaluations append as they finish, and the incumbent warm-starts from
+    the best cached trial. Kill the process at any point and ``run()``
+    again — it completes the remaining configs only.
+    """
+
+    def __init__(self, name: str, tuner, benchmark,
+                 cache_dir: str | os.PathLike = ".tuning_sessions",
+                 warm_start: bool = True,
+                 fingerprint: Optional[str] = None,
+                 benchmark_name: Optional[str] = None):
+        self.name = name
+        self.tuner = tuner
+        self.benchmark = benchmark
+        # distinct cache namespace per objective: a session file reused with
+        # a different benchmark must not warm-start across metrics
+        self.benchmark_name = benchmark_name or name
+        self.warm_start = warm_start
+        self.cache = TrialCache(Path(cache_dir) / f"{name}.jsonl",
+                                fingerprint=fingerprint)
+
+    def run(self, backend=None, progress=None):
+        return self.tuner.tune(self.benchmark, progress=progress,
+                               backend=backend,
+                               cache=self.cache.bound(self.benchmark_name),
+                               warm_start=self.warm_start)

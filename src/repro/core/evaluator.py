@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 from . import welford
 from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
@@ -31,6 +31,11 @@ from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
 # one untimed DGEMM call) and returns a zero-arg sampler producing one metric
 # observation per call (e.g. GFLOP/s of one timed kernel execution).
 InvocationFactory = Callable[[], Callable[[], float]]
+
+# The pruning reference (stop condition 4): a fixed score, absent, or a
+# zero-arg supplier of the live global best (IncumbentCell.get) that
+# concurrent backends re-read before every sample.
+Incumbent = Union[float, Callable[[], Optional[float]], None]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,8 +136,19 @@ class EvaluationSettings:
         return conds
 
 
+def _resolve_incumbent(incumbent: Incumbent) -> Optional[float]:
+    """The incumbent may be a scalar or a zero-arg supplier of the *live*
+    global best (concurrent backends share it through an IncumbentCell)."""
+    return incumbent() if callable(incumbent) else incumbent
+
+
 class Evaluator:
-    """Runs the two-level evaluation process for one configuration."""
+    """Runs the two-level evaluation process for one configuration.
+
+    ``evaluate`` is re-entrant: all mutable state is local, so one
+    Evaluator instance may serve many threads concurrently (the
+    ThreadPoolBackend relies on this).
+    """
 
     def __init__(self, settings: EvaluationSettings,
                  clock: Callable[[], float] = time.perf_counter):
@@ -141,7 +157,7 @@ class Evaluator:
 
     # -- inner loop -----------------------------------------------------------
     def _run_invocation(self, sample_fn: Callable[[], float],
-                        incumbent: Optional[float],
+                        incumbent: Incumbent,
                         conditions: Sequence[StopCondition]) -> InvocationResult:
         from .confidence import ReservoirBootstrap, sign_test_median_ci
         s = self.settings
@@ -168,7 +184,7 @@ class Evaluator:
             ctx = EvalContext(welford=state,
                               elapsed_s=self.clock() - t0,
                               count=count,
-                              incumbent=incumbent,
+                              incumbent=_resolve_incumbent(incumbent),
                               direction=self.settings.direction,
                               ci_fn=ci_fn)
             decision = first_decision(conditions, ctx)
@@ -182,7 +198,7 @@ class Evaluator:
 
     # -- outer loop -----------------------------------------------------------
     def evaluate(self, make_invocation: InvocationFactory,
-                 incumbent: Optional[float] = None) -> EvalResult:
+                 incumbent: Incumbent = None) -> EvalResult:
         s = self.settings
         inner_conds = s.inner_conditions()
         outer_conds = s.outer_conditions()
@@ -206,7 +222,7 @@ class Evaluator:
             ctx = EvalContext(welford=outer_state,
                               elapsed_s=self.clock() - t_start,
                               count=len(invocations),
-                              incumbent=incumbent,
+                              incumbent=_resolve_incumbent(incumbent),
                               direction=direction)
             decision = first_decision(outer_conds, ctx)
             if decision is not None:

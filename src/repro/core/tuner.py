@@ -10,11 +10,14 @@ under different :class:`EvaluationSettings` flags and search orders.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Optional
 
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
                         InvocationFactory)
+from .executor import (ExecutionBackend, ExecutionStats, IncumbentCell,
+                       SerialBackend)
 from .searchspace import Config, SearchSpace
 from .stop_conditions import Direction
 
@@ -30,6 +33,8 @@ BenchmarkFactory = Callable[[Config], InvocationFactory]
 class TrialRecord:
     config: Config
     result: EvalResult
+    cached: bool = False      # served from a TrialCache, not re-evaluated
+    worker: int = 0           # backend worker that ran it
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +47,12 @@ class TuningResult:
     n_pruned: int
     settings_label: str
     order: str
+    # execution-backend accounting (serial defaults keep old pickles/tests)
+    backend: str = "serial"
+    n_workers: int = 1
+    serial_time_s: float = 0.0     # sum of per-trial wall clock
+    parallel_time_s: float = 0.0   # run wall clock (simulated: max/worker)
+    n_cached: int = 0              # trials served from the cache
 
     def summary_row(self) -> dict:
         return {
@@ -69,32 +80,64 @@ class Tuner:
 
     def tune(self, benchmark: BenchmarkFactory,
              progress: Optional[Callable[[Config, EvalResult], None]] = None,
-             ) -> TuningResult:
+             backend: Optional[ExecutionBackend] = None,
+             cache=None, warm_start: bool = False) -> TuningResult:
+        """Search the space for the best configuration.
+
+        ``backend`` schedules the evaluations (default
+        :class:`~repro.core.executor.SerialBackend`, the paper's loop);
+        ``cache`` is a :class:`~repro.core.cache.BoundCache` — configs
+        already in it are served without re-evaluation and fresh results
+        are appended; ``warm_start`` additionally seeds the incumbent from
+        the best cached trial so pruning bites from trial 1.
+        """
+        if backend is None:
+            backend = SerialBackend(clock=self.clock)
         evaluator = Evaluator(self.settings, clock=self.clock)
         direction = self.settings.direction
-        best_cfg: Optional[Config] = None
-        best_score: Optional[float] = None
-        trials: list[TrialRecord] = []
+        cell = IncumbentCell(direction)
+        if cache is not None and warm_start:
+            seed = cache.best(direction)
+            if seed is not None:
+                cell.offer(seed[0], seed[1])
+        hits: set[int] = set()
+        hits_lock = threading.Lock()
+
+        def evaluate(cfg: Config, incumbent) -> EvalResult:
+            if cache is not None:
+                hit = cache.get(cfg)
+                if hit is not None:
+                    with hits_lock:
+                        hits.add(id(cfg))
+                    return hit
+            res = evaluator.evaluate(benchmark(cfg), incumbent=incumbent)
+            if cache is not None:
+                cache.put(cfg, res)
+            return res
+
         t0 = self.clock()
-        for cfg in self.space.ordered(self.order, seed=self.seed):
-            result = evaluator.evaluate(benchmark(cfg), incumbent=best_score)
-            trials.append(TrialRecord(config=cfg, result=result))
-            if progress is not None:
-                progress(cfg, result)
-            if not result.pruned and (
-                    best_score is None
-                    or direction.better(result.score, best_score)):
-                best_score = result.score
-                best_cfg = cfg
+        configs = self.space.ordered(self.order, seed=self.seed)
+        outcomes, stats = backend.run(configs, evaluate, cell,
+                                      progress=progress)
+        best_cfg, best_score = cell.snapshot()
+        trials = tuple(
+            TrialRecord(config=o.config, result=o.result,
+                        cached=id(o.config) in hits, worker=o.worker)
+            for o in outcomes)
         return TuningResult(
             best_config=best_cfg,
             best_score=best_score,
-            trials=tuple(trials),
+            trials=trials,
             total_time_s=self.clock() - t0,
             total_samples=sum(t.result.total_samples for t in trials),
             n_pruned=sum(1 for t in trials if t.result.pruned),
             settings_label=self.settings.label(),
             order=self.order,
+            backend=stats.backend,
+            n_workers=stats.n_workers,
+            serial_time_s=stats.serial_time_s,
+            parallel_time_s=stats.parallel_time_s,
+            n_cached=sum(1 for t in trials if t.cached),
         )
 
 

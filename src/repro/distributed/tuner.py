@@ -22,13 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 from ..core import welford
 from ..core.confidence import Interval, ci_mean
 from ..core.evaluator import EvaluationSettings, Evaluator, InvocationFactory
+from ..core.executor import SimulatedShardedBackend, shard_configs  # noqa: F401 — re-export
 from ..core.searchspace import Config, SearchSpace
-from ..core.tuner import BenchmarkFactory, TrialRecord
+from ..core.tuner import BenchmarkFactory, TrialRecord, Tuner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,14 +48,14 @@ class DistributedTuningResult:
         return self.serial_time_s / max(self.parallel_time_s, 1e-12)
 
 
-def shard_configs(configs: list[Config], n_workers: int) -> list[list[Config]]:
-    """Strided assignment: adjacent (similar-cost) configs spread across
-    workers, balancing the size-correlated evaluation cost (paper Fig. 6)."""
-    return [configs[w::n_workers] for w in range(n_workers)]
-
-
 class DistributedTuner:
-    """Search-space-sharded tuning with per-round incumbent all-reduce."""
+    """Search-space-sharded tuning with per-round incumbent all-reduce.
+
+    Now a thin shell: the round scheduling, strided sharding and
+    per-worker wall-clock accounting live in
+    :class:`~repro.core.executor.SimulatedShardedBackend`, shared with the
+    serial and thread-pool paths of :class:`~repro.core.tuner.Tuner`.
+    """
 
     def __init__(self, space: SearchSpace, settings: EvaluationSettings,
                  n_workers: int = 4, order: str = "exhaustive",
@@ -65,43 +66,21 @@ class DistributedTuner:
         self.order = order
         self.seed = seed
 
-    def tune(self, benchmark: BenchmarkFactory) -> DistributedTuningResult:
-        evaluator = Evaluator(self.settings)
-        direction = self.settings.direction
-        shards = shard_configs(self.space.ordered(self.order, self.seed),
-                               self.n_workers)
-        worker_time = [0.0] * self.n_workers
-        incumbent: Optional[float] = None
-        best_cfg: Optional[Config] = None
-        trials: list[TrialRecord] = []
-        rounds = max(len(s) for s in shards)
-        for r in range(rounds):
-            # one synchronized round: each worker evaluates its r-th config
-            # against the incumbent agreed at the end of the previous round
-            round_results = []
-            for w, shard in enumerate(shards):
-                if r >= len(shard):
-                    continue
-                cfg = shard[r]
-                t0 = time.perf_counter()
-                res = evaluator.evaluate(benchmark(cfg), incumbent=incumbent)
-                worker_time[w] += time.perf_counter() - t0
-                trials.append(TrialRecord(config=cfg, result=res))
-                round_results.append((cfg, res))
-            # incumbent all-reduce (scalar pmax/pmin on a real mesh)
-            for cfg, res in round_results:
-                if not res.pruned and (incumbent is None or
-                                       direction.better(res.score, incumbent)):
-                    incumbent = res.score
-                    best_cfg = cfg
+    def tune(self, benchmark: BenchmarkFactory,
+             cache=None) -> DistributedTuningResult:
+        result = Tuner(self.space, self.settings, order=self.order,
+                       seed=self.seed).tune(
+            benchmark,
+            backend=SimulatedShardedBackend(self.n_workers),
+            cache=cache)
         return DistributedTuningResult(
-            best_config=best_cfg, best_score=incumbent,
-            trials=tuple(trials),
-            total_samples=sum(t.result.total_samples for t in trials),
-            serial_time_s=sum(worker_time),
-            parallel_time_s=max(worker_time) if worker_time else 0.0,
+            best_config=result.best_config, best_score=result.best_score,
+            trials=result.trials,
+            total_samples=result.total_samples,
+            serial_time_s=result.serial_time_s,
+            parallel_time_s=result.parallel_time_s,
             n_workers=self.n_workers,
-            n_pruned=sum(1 for t in trials if t.result.pruned))
+            n_pruned=result.n_pruned)
 
 
 def replicated_evaluate(make_invocation: InvocationFactory,

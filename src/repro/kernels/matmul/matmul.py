@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import tpu_compiler_params
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_steps: int):
     """One (bm, bn) output tile; accumulates over the sequential k axis."""
@@ -64,7 +66,7 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 512, bn: int = 512,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import tpu_compiler_params
+
 
 def _ssd_kernel(xdt_ref, bm_ref, cm_ref, cum_ref, y_ref, h_ref, *,
                 q_len: int):
@@ -94,7 +96,7 @@ def ssd_chunk_scan_pallas(xdt: jax.Array, bm: jax.Array, cm: jax.Array,
                                lambda b, h, c: (b, h, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(xdt.shape, jnp.float32),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xdt.astype(jnp.float32), bm.astype(jnp.float32),

@@ -1,0 +1,178 @@
+"""Trial cache + resumable sessions: exact round-trip, skip-on-resume,
+fingerprint invalidation."""
+
+import json
+
+import pytest
+
+from repro.core import (EvaluationSettings, ThreadPoolBackend, Tuner,
+                        TuningSession)
+from repro.core.cache import TrialCache, config_key
+from repro.core.evaluator import EvalResult, InvocationResult
+from repro.core.searchspace import grid
+from repro.core.stop_conditions import Direction
+
+SETTINGS = EvaluationSettings(max_invocations=2, max_iterations=10,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+
+def make_result(score=42.0):
+    # deliberately awkward floats: exact round-trip must survive repr/json
+    inv = InvocationResult(mean=score / 3.0, count=7, elapsed_s=0.1230000004,
+                           stop_reason="max_count(7)", pruned=False,
+                           m2=1.0000000000000002e-9)
+    return EvalResult(score=score, best_invocation=score / 3.0,
+                      invocations=(inv, inv), total_samples=14,
+                      total_time_s=0.25, measured_time_s=0.2460000008,
+                      pruned=False, stop_reason="max_count(2)")
+
+
+def counting_benchmark(counter):
+    """Deterministic objective that counts factory instantiations."""
+
+    def bench(cfg):
+        mu = 100.0 - (cfg["x"] - 5) ** 2
+
+        def factory():
+            counter[cfg["x"]] = counter.get(cfg["x"], 0) + 1
+            return lambda: mu
+
+        return factory
+
+    return bench
+
+
+def test_roundtrip_exact_welford_moments(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    cache = TrialCache(path, fingerprint="fp")
+    res = make_result()
+    cache.put("bench", {"n": 128, "m": 256}, res)
+
+    reloaded = TrialCache(path, fingerprint="fp")
+    hit = reloaded.get("bench", {"m": 256, "n": 128})  # key order-insensitive
+    assert hit is not None
+    assert hit == res          # dataclass equality: every float bit-exact
+    assert hit.invocations[0].m2 == res.invocations[0].m2
+    assert reloaded.get("bench", {"n": 1, "m": 1}) is None
+    assert reloaded.get("other-bench", {"n": 128, "m": 256}) is None
+
+
+def test_fingerprint_mismatch_invalidates(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    TrialCache(path, fingerprint="tpu-v5e").put("bench", {"x": 1},
+                                                make_result())
+    other = TrialCache(path, fingerprint="cpu-host")
+    assert other.get("bench", {"x": 1}) is None
+    assert other.n_stale == 1
+    assert len(other) == 0
+
+
+def test_torn_trailing_line_tolerated(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    cache = TrialCache(path, fingerprint="fp")
+    cache.put("bench", {"x": 1}, make_result(10.0))
+    cache.put("bench", {"x": 2}, make_result(20.0))
+    with open(path, "a") as f:
+        f.write('{"version": 1, "fingerprint": "fp", "benchm')  # killed write
+    reloaded = TrialCache(path, fingerprint="fp")
+    assert len(reloaded) == 2
+    assert reloaded.get("bench", {"x": 2}).score == 20.0
+
+
+def test_resume_skips_completed_trials(tmp_path):
+    space = grid(x=tuple(range(8)))
+    counter = {}
+    bench = counting_benchmark(counter)
+    session = TuningSession("s1", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    first = session.run()
+    assert first.best_config == {"x": 5}
+    assert first.n_cached == 0
+    assert sum(counter.values()) > 0
+
+    counter.clear()
+    resumed = TuningSession("s1", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    second = resumed.run()
+    assert counter == {}                    # nothing re-evaluated
+    assert second.n_cached == len(second.trials) == 8
+    assert second.best_config == first.best_config
+    assert second.best_score == first.best_score
+
+
+def test_killed_session_resumes_where_it_left_off(tmp_path):
+    space = grid(x=tuple(range(8)))
+    counter = {}
+    bench = counting_benchmark(counter)
+
+    class Killed(RuntimeError):
+        pass
+
+    def kill_after_three(cfg, res):
+        if len(counter) >= 3:
+            raise Killed
+
+    session = TuningSession("s2", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    with pytest.raises(Killed):
+        session.run(progress=kill_after_three)
+    assert len(counter) == 3                # three configs hit the disk
+
+    counter.clear()
+    resumed = TuningSession("s2", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    result = resumed.run()
+    assert result.best_config == {"x": 5}
+    assert len(result.trials) == 8
+    assert result.n_cached == 3             # the pre-kill trials
+    assert len(counter) == 5                # only the remaining configs ran
+
+
+def test_warm_start_prunes_from_trial_one(tmp_path):
+    """With the incumbent seeded from a cached optimum, every new config
+    (all strictly worse, zero variance) is pruned immediately."""
+    space = grid(x=tuple(range(8)))
+    bench = counting_benchmark({})
+    # pre-populate only the optimum
+    seed_session = TuningSession("s3", Tuner(grid(x=(5,)), SETTINGS), bench,
+                                 cache_dir=tmp_path, fingerprint="fp")
+    seed_session.run()
+
+    session = TuningSession("s3", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    result = session.run()
+    assert result.best_config == {"x": 5}
+    assert result.n_cached == 1
+    assert result.n_pruned == 7             # every non-cached trial pruned
+
+
+def test_session_with_thread_backend(tmp_path):
+    space = grid(x=tuple(range(8)))
+    bench = counting_benchmark({})
+    session = TuningSession("s4", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    first = session.run(backend=ThreadPoolBackend(4))
+    resumed = TuningSession("s4", Tuner(space, SETTINGS), bench,
+                            cache_dir=tmp_path, fingerprint="fp")
+    second = resumed.run(backend=ThreadPoolBackend(4))
+    assert second.n_cached == 8
+    assert second.best_config == first.best_config == {"x": 5}
+
+
+def test_cached_best_feeds_incumbent_even_without_warm_start(tmp_path):
+    """Cache hits replay through the incumbent cell so best_config is
+    correct when the whole space is served from cache."""
+    path = tmp_path / "c.jsonl"
+    cache = TrialCache(path, fingerprint="fp")
+    for x in range(4):
+        cache.put("b", {"x": x}, make_result(score=float(10 + x)))
+    best = cache.best("b", Direction.MAXIMIZE)
+    assert best == ({"x": 3}, 13.0)
+    assert cache.best("missing", Direction.MAXIMIZE) is None
+
+
+def test_config_key_canonical():
+    assert config_key({"a": 1, "b": 2}) == config_key({"b": 2, "a": 1})
+    assert config_key({"a": 1}) != config_key({"a": 2})
+    assert json.loads(config_key({"a": 1, "b": 2})) == {"a": 1, "b": 2}

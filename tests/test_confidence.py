@@ -2,10 +2,11 @@
 
 import math
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 import repro.core.welford as W
 from repro.core import confidence as C

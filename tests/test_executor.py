@@ -1,0 +1,140 @@
+"""Execution backends: serial/thread equivalence, live incumbent sharing."""
+
+import threading
+
+import pytest
+
+from repro.core import (EvaluationSettings, IncumbentCell, SerialBackend,
+                        SimulatedShardedBackend, ThreadPoolBackend, Tuner)
+from repro.core.searchspace import grid
+from repro.core.stop_conditions import Direction
+
+
+def deterministic_benchmark(cfg):
+    """Noise-free objective: score is exactly 100 - (x - 7)^2."""
+    mu = 100.0 - (cfg["x"] - 7) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+SETTINGS = EvaluationSettings(max_invocations=3, max_iterations=20,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+
+def test_incumbent_cell_direction_aware():
+    cell = IncumbentCell(Direction.MAXIMIZE)
+    assert cell.get() is None
+    assert cell.offer({"x": 1}, 5.0)
+    assert not cell.offer({"x": 2}, 4.0)      # worse
+    assert not cell.offer({"x": 2}, 5.0)      # tie is not strictly better
+    assert cell.offer({"x": 3}, 6.0)
+    assert cell.snapshot() == ({"x": 3}, 6.0)
+
+    cell = IncumbentCell(Direction.MINIMIZE)
+    assert cell.offer({"x": 1}, 5.0)
+    assert cell.offer({"x": 2}, 4.0)
+    assert not cell.offer({"x": 3}, 4.5)
+
+
+@pytest.mark.parametrize("backend", [
+    SerialBackend(),
+    ThreadPoolBackend(2),
+    ThreadPoolBackend(8),
+    SimulatedShardedBackend(4),
+])
+def test_backends_find_same_best_config(backend):
+    space = grid(x=tuple(range(12)))
+    result = Tuner(space, SETTINGS).tune(deterministic_benchmark,
+                                         backend=backend)
+    assert result.best_config == {"x": 7}
+    assert result.best_score == pytest.approx(100.0)
+    assert len(result.trials) == 12
+    assert result.n_workers == getattr(backend, "n_workers", 1)
+    assert result.backend == backend.name
+
+
+def test_thread_matches_serial_best(rng):
+    space = grid(x=tuple(range(12)))
+    serial = Tuner(space, SETTINGS).tune(deterministic_benchmark)
+    threaded = Tuner(space, SETTINGS).tune(deterministic_benchmark,
+                                           backend=ThreadPoolBackend(4))
+    assert threaded.best_config == serial.best_config
+    assert threaded.best_score == serial.best_score
+
+
+def test_thread_trials_preserve_search_order():
+    space = grid(x=tuple(range(12)))
+    result = Tuner(space, SETTINGS).tune(deterministic_benchmark,
+                                         backend=ThreadPoolBackend(4))
+    assert [t.config["x"] for t in result.trials] == list(range(12))
+
+
+def test_thread_incumbent_sharing_prunes():
+    """A best score found on one thread must prune evaluations still in
+    flight on other threads (stop condition 4 against the live cell).
+
+    The optimum (x=7) is first in search order; every other config's
+    sampler blocks until the optimum's trial has been folded into the
+    incumbent cell, so each of them must observe incumbent=100 and be
+    pruned (zero sample variance -> zero CI margin).
+    """
+    optimum_done = threading.Event()
+
+    def benchmark(cfg):
+        mu = 100.0 - (cfg["x"] - 7) ** 2
+
+        def factory():
+            def sample():
+                if cfg["x"] != 7:
+                    assert optimum_done.wait(timeout=30.0)
+                return mu
+            return sample
+
+        return factory
+
+    def progress(cfg, res):
+        if cfg["x"] == 7:
+            optimum_done.set()
+
+    space = grid(x=(7, 0, 1, 2, 3, 4))
+    result = Tuner(space, SETTINGS).tune(
+        benchmark, progress=progress, backend=ThreadPoolBackend(3))
+    assert result.best_config == {"x": 7}
+    assert result.n_pruned == 5              # everything except the optimum
+    for t in result.trials:
+        if t.config["x"] != 7:
+            assert t.result.pruned
+
+
+def test_simulated_backend_accounting():
+    space = grid(x=tuple(range(10)))
+    result = Tuner(space, SETTINGS).tune(deterministic_benchmark,
+                                         backend=SimulatedShardedBackend(4))
+    assert result.parallel_time_s <= result.serial_time_s + 1e-9
+    workers = {t.worker for t in result.trials}
+    assert workers == {0, 1, 2, 3}
+
+
+def test_minimize_direction_with_thread_backend():
+    settings = EvaluationSettings(max_invocations=2, max_iterations=10,
+                                  direction=Direction.MINIMIZE)
+
+    def benchmark(cfg):
+        mu = (cfg["x"] - 3) ** 2 + 1.0
+        return lambda: (lambda: mu)
+
+    space = grid(x=tuple(range(8)))
+    result = Tuner(space, settings).tune(benchmark,
+                                         backend=ThreadPoolBackend(4))
+    assert result.best_config == {"x": 3}
+
+
+def test_bad_worker_count_rejected():
+    with pytest.raises(ValueError):
+        ThreadPoolBackend(0)
+    with pytest.raises(ValueError):
+        SimulatedShardedBackend(0)

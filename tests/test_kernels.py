@@ -17,6 +17,13 @@ def _tol(dtype):
         dict(rtol=2e-5, atol=2e-5)
 
 
+def _contraction_tol(dtype):
+    # looser f32 bound: the blocked kernel's accumulation order differs from
+    # the unblocked oracle over contraction dims of a few hundred
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # matmul
 # ---------------------------------------------------------------------------
@@ -31,7 +38,8 @@ def test_matmul_shapes_dtypes(m, n, k, dtype):
     out = matmul(a, b, bm=128, bn=128, bk=64, interpret=True)
     ref = matmul_ref(a, b)
     np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32), **_tol(dtype))
+                               np.asarray(ref, np.float32),
+                               **_contraction_tol(dtype))
 
 
 @pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 256, 64),

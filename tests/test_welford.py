@@ -1,11 +1,12 @@
 """Welford online moments: property tests against the two-pass oracle."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 import repro.core.welford as W
 
