@@ -1,32 +1,68 @@
 """Fig. 1 analog: assemble this host's empirical Roofline model from the
-autotuned peaks — the paper's end product (no vendor specs needed)."""
+autotuned peaks — the paper's end product (no vendor specs needed).
+
+Rendering goes through :mod:`repro.core.report`, so this bench produces the
+same dashboard the cache-backed CLI emits. With ``cache_dir`` set (the
+harness's ``--resume``), both tuning runs persist as the ``roofline``
+session (benchmarks ``dgemm`` and ``triad``), which makes
+``python -m benchmarks.run --resume --report`` a no-re-measuring round trip.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import (Evaluator, TRIAD_INTENSITY, Tuner, from_measurements,
-                        operational_intensity, ridge_point)
+from repro.core import (TRIAD_INTENSITY, Tuner, TuningSession, build_reports,
+                        grid, hardware_fingerprint, load_trials,
+                        operational_intensity, ridge_point,
+                        trials_from_result)
+from repro.core.report import render_markdown
 
 from .common import (dgemm_benchmark, dgemm_space, emit, paper_settings,
                      print_table, triad_invocation_factory)
 
+TRIAD_SIZES = {"cache": 1 << 22, "dram": 1 << 28}
 
-def run(quick: bool = True) -> dict:
+
+def run(quick: bool = True, cache_dir: str | None = None) -> dict:
     settings = dataclasses.replace(paper_settings(quick),
                                    use_ci_convergence=True,
                                    use_inner_prune=True,
                                    use_outer_prune=True)
-    # compute ceiling from the autotuned matmul peak
-    peak = Tuner(dgemm_space(quick), settings).tune(dgemm_benchmark)
-    peak_flops = peak.best_score * 1e9
-    # bandwidth slopes from TRIAD at cache-resident and streaming sizes
-    ev = Evaluator(settings)
-    bw_cache = ev.evaluate(triad_invocation_factory(1 << 22)).score * 1e9
-    bw_dram = ev.evaluate(triad_invocation_factory(1 << 28)).score * 1e9
+    # Each TRIAD size probes a different memory subsystem: the sizes are
+    # measurements, not competitors, so incumbent pruning stays off (a
+    # pruned DRAM stream would be a truncated bandwidth estimate).
+    triad_settings = dataclasses.replace(settings, use_inner_prune=False,
+                                         use_outer_prune=False)
+    dgemm_tuner = Tuner(dgemm_space(quick), settings)
+    triad_tuner = Tuner(grid(n_bytes=tuple(TRIAD_SIZES.values())),
+                        triad_settings)
+    triad_bench = lambda cfg: triad_invocation_factory(cfg["n_bytes"])  # noqa: E731
 
-    model = from_measurements("this-host", peak_flops,
-                              {"cache": bw_cache, "dram": bw_dram})
+    fp = hardware_fingerprint()
+    if cache_dir is not None:
+        peak = TuningSession("roofline", dgemm_tuner, dgemm_benchmark,
+                             cache_dir=cache_dir,
+                             benchmark_name="dgemm").run()
+        bw = TuningSession("roofline", triad_tuner, triad_bench,
+                           cache_dir=cache_dir,
+                           benchmark_name="triad").run()
+        # across all fingerprints: a cache carried over from another
+        # machine/jax version still renders as its own dashboard section
+        trials = load_trials(f"{cache_dir}/roofline.jsonl")
+    else:
+        peak = dgemm_tuner.tune(dgemm_benchmark)
+        bw = triad_tuner.tune(triad_bench)
+        trials = (trials_from_result(peak, "dgemm", fp)
+                  + trials_from_result(bw, "triad", fp))
+
+    peak_flops = peak.best_score * 1e9
+    by_size = {t.config["n_bytes"]: t.result.score for t in bw.trials
+               if not t.result.pruned}
+    bw_cache = by_size.get(TRIAD_SIZES["cache"], 0.0) * 1e9
+    bw_dram = by_size.get(TRIAD_SIZES["dram"], 0.0) * 1e9
+
+    reports, skipped = build_reports(trials)
     dgemm_I = operational_intensity(
         2 * 1024 ** 3, 3 * 1024 * 1024 * 4)  # n=m=k=1024 f32
     rows = [{
@@ -38,21 +74,24 @@ def run(quick: bool = True) -> dict:
         "quantity": "bw (dram)", "value": f"{bw_dram/1e9:.1f} GB/s",
     }, {
         "quantity": "ridge I (dram)",
-        "value": f"{ridge_point(peak_flops, bw_dram):.1f} FLOP/B",
+        "value": f"{ridge_point(peak_flops, max(bw_dram, 1.0)):.1f} FLOP/B",
     }, {
         "quantity": "TRIAD I", "value": f"{TRIAD_INTENSITY:.4f} FLOP/B",
     }, {
         "quantity": "DGEMM-1024 I", "value": f"{dgemm_I:.1f} FLOP/B",
     }]
     print_table("Fig. 1 analog: empirical roofline (this host)", rows)
-    print(model.ascii_plot(
-        "dram", marks=[("T", TRIAD_INTENSITY,
-                        model.attainable(TRIAD_INTENSITY, "dram")),
-                       ("D", dgemm_I, peak_flops)]))
+    print()
+    print(render_markdown(reports, skipped))
     emit("roofline/peak_gflops", 0.0, f"{peak_flops/1e9:.1f}")
     emit("roofline/bw_dram_gbps", 0.0, f"{bw_dram/1e9:.1f}")
+    # return THIS machine's model: a multi-fingerprint resume cache sorts
+    # reports by fingerprint, so index 0 could be a stale machine
+    model = next((r.model for r in reports if r.fingerprint == fp), None)
     return {"peak_flops": peak_flops, "bw_dram": bw_dram,
-            "bw_cache": bw_cache, "csv": model.to_csv()}
+            "bw_cache": bw_cache,
+            "csv": model.to_csv() if model is not None else "",
+            "reports": reports}
 
 
 if __name__ == "__main__":

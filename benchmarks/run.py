@@ -42,6 +42,9 @@ def main() -> None:
                     help="persist tuning trials under DIR (default "
                          ".tuning_sessions) and skip configs already "
                          "evaluated by a previous --resume run")
+    ap.add_argument("--report", action="store_true",
+                    help="after the benches, render the cache-backed "
+                         "roofline dashboard from the --resume cache dir")
     args = ap.parse_args()
     quick = not args.full
 
@@ -62,6 +65,28 @@ def main() -> None:
                  f"FAIL:{type(e).__name__}")
             print(f"[benchmarks] {name} failed: {e}", file=sys.stderr)
             raise
+
+    if args.report:
+        import pathlib
+
+        from repro.core import build_reports, load_trials
+        from repro.core.report import render_markdown
+
+        cache_dir = pathlib.Path(args.resume or ".tuning_sessions")
+        trials = load_trials(cache_dir) if cache_dir.is_dir() else []
+        reports, skipped = build_reports(trials)
+        if reports:
+            print()
+            print(render_markdown(reports, skipped))
+        elif skipped:
+            print(f"\n[report] no reportable fingerprint under {cache_dir}/:",
+                  file=sys.stderr)
+            for fp, reason in skipped:
+                print(f"[report]   {fp}: {reason}", file=sys.stderr)
+        else:
+            print(f"\n[report] no cached trials under {cache_dir}/ — run "
+                  "with --resume so roofline_model persists its dgemm/triad "
+                  "sessions first.", file=sys.stderr)
 
 
 if __name__ == "__main__":

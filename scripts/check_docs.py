@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Execute every fenced shell/python snippet in README.md and docs/.
+
+Documentation examples rot silently; this checker actually runs them.
+For each markdown file, every fenced block whose info string is
+``python`` or ``bash``/``sh``/``shell`` executes in a scratch directory
+seeded with symlinks to the repo's ``src``, ``scripts``, ``benchmarks``,
+``examples``, and ``docs`` — so commands are copy-pasteable from the repo
+root while artifacts (caches, reports) land in the scratch dir, not the
+checkout. Blocks within one file share the scratch dir and run in order,
+so a python block may write a cache a later bash block consumes.
+
+Opting a block out (e.g. the full tier-1 run, or full-budget tuning):
+put this HTML comment on the line directly above the fence:
+
+    <!-- check-docs: skip -->
+
+Usage:
+
+    python scripts/check_docs.py            # README.md + docs/*.md
+    python scripts/check_docs.py docs/cache-format.md
+
+Exit status is non-zero if any snippet fails; wired into tier-1 through
+``tests/test_docs.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SKIP_MARK = "<!-- check-docs: skip -->"
+# opening fence with arbitrary info string ("```python title=x" included:
+# the language is the first word) — a bare "```" closer never reaches this
+# regex at top level because block bodies are consumed by the inner loop
+FENCE_RE = re.compile(r"^```(.*?)\s*$")
+#: repo entries mirrored into each scratch dir (never ``tests``/``pytest.ini``:
+#: a doc snippet must not be able to recurse into the test suite by accident)
+LINK_ENTRIES = ("src", "scripts", "benchmarks", "examples", "docs")
+RUNNABLE = {"python", "bash", "sh", "shell"}
+BLOCK_TIMEOUT_S = 240
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    lang: str
+    code: str
+    lineno: int       # 1-based line of the opening fence
+    skipped: bool
+
+    @property
+    def runnable(self) -> bool:
+        return self.lang in RUNNABLE and not self.skipped
+
+
+def extract_blocks(text: str) -> list[Block]:
+    blocks: list[Block] = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m is None:
+            i += 1
+            continue
+        info = m.group(1).strip()
+        lang = info.split()[0].lower() if info else ""
+        skipped = i > 0 and lines[i - 1].strip() == SKIP_MARK
+        body: list[str] = []
+        j = i + 1
+        while j < len(lines) and lines[j].strip() != "```":
+            body.append(lines[j])
+            j += 1
+        blocks.append(Block(lang=lang, code="\n".join(body) + "\n",
+                            lineno=i + 1, skipped=skipped))
+        i = j + 1
+    return blocks
+
+
+def default_docs(repo: pathlib.Path = REPO) -> list[pathlib.Path]:
+    docs = []
+    if (repo / "README.md").exists():
+        docs.append(repo / "README.md")
+    docs.extend(sorted((repo / "docs").glob("*.md")))
+    return docs
+
+
+def _make_scratch(tmp: pathlib.Path) -> None:
+    for entry in LINK_ENTRIES:
+        target = REPO / entry
+        if target.exists():
+            (tmp / entry).symlink_to(target)
+
+
+def _run(block: Block, cwd: pathlib.Path) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if block.lang == "python":
+        argv = [sys.executable, "-"]
+    else:
+        argv = ["bash", "-euo", "pipefail", "-s"]
+    return subprocess.run(argv, input=block.code, cwd=cwd, env=env,
+                          text=True, capture_output=True,
+                          timeout=BLOCK_TIMEOUT_S)
+
+
+def check_file(path: str | os.PathLike,
+               blocks: list[Block] | None = None) -> list[str]:
+    """Run every runnable block of one markdown file; return failure
+    messages (empty == all good). ``blocks`` skips re-parsing when the
+    caller already extracted them."""
+    path = pathlib.Path(path)
+    if blocks is None:
+        blocks = extract_blocks(path.read_text(encoding="utf-8"))
+    failures: list[str] = []
+    with tempfile.TemporaryDirectory(prefix="check-docs-") as tmp:
+        scratch = pathlib.Path(tmp)
+        _make_scratch(scratch)
+        for block in blocks:
+            if not block.runnable:
+                continue
+            try:
+                proc = _run(block, scratch)
+            except subprocess.TimeoutExpired:
+                failures.append(f"{path.name}:{block.lineno} [{block.lang}] "
+                                f"timed out after {BLOCK_TIMEOUT_S}s")
+                continue
+            if proc.returncode != 0:
+                tail = (proc.stderr or proc.stdout or "").strip()
+                tail = "\n".join(tail.splitlines()[-12:])
+                failures.append(f"{path.name}:{block.lineno} [{block.lang}] "
+                                f"exited {proc.returncode}\n{tail}")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    files = [pathlib.Path(a) for a in argv] if argv else default_docs()
+    any_failed = False
+    for f in files:
+        blocks = extract_blocks(f.read_text(encoding="utf-8"))
+        n_run = sum(1 for b in blocks if b.runnable)
+        n_skip = sum(1 for b in blocks if b.lang in RUNNABLE and b.skipped)
+        failures = check_file(f, blocks)
+        status = "FAIL" if failures else "ok"
+        print(f"{f}: {n_run} snippet(s) run, {n_skip} skipped — {status}")
+        for msg in failures:
+            any_failed = True
+            print(f"  {msg}")
+    return 1 if any_failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

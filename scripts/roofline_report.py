@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Render roofline dashboards from persisted trial caches — no re-measuring.
+
+    PYTHONPATH=src python scripts/roofline_report.py .tuning_sessions/nightly.jsonl
+    PYTHONPATH=src python scripts/roofline_report.py .tuning_sessions \
+        --csv roofline.csv
+
+Takes one or more cache files (or directories of ``*.jsonl`` session
+caches), groups the trials by benchmark × hardware fingerprint, extracts
+the DGEMM incumbent (compute ceiling ``F_p``) and the per-size TRIAD
+incumbents (memory slopes ``B_a``), and emits a markdown dashboard per
+fingerprint — measured peaks with confidence intervals from the stored
+Welford moments, an ASCII roofline with achieved-kernel markers, a
+%-of-roof gap table — plus a side-by-side comparison across fingerprints.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_REPO), str(_REPO / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import build_reports, load_trials  # noqa: E402
+from repro.core.report import (DGEMM_BENCHMARK, TRIAD_BENCHMARK,  # noqa: E402
+                               render_csv, render_markdown)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="+",
+                    help="cache files or directories of *.jsonl caches")
+    ap.add_argument("--dgemm-benchmark", default=DGEMM_BENCHMARK,
+                    help="benchmark name supplying the compute peak")
+    ap.add_argument("--triad-benchmark", default=TRIAD_BENCHMARK,
+                    help="benchmark name supplying the bandwidth slopes")
+    ap.add_argument("--confidence", type=float, default=0.99)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the markdown dashboard here (default stdout)")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="also write the flat CSV (curves, marks, gaps)")
+    args = ap.parse_args()
+
+    trials = []
+    for p in args.paths:
+        path = pathlib.Path(p)
+        if not path.exists():
+            print(f"error: no such cache: {p}", file=sys.stderr)
+            return 2
+        trials.extend(load_trials(path))
+    if not trials:
+        print("error: no readable trials in the given cache(s)",
+              file=sys.stderr)
+        return 1
+
+    reports, skipped = build_reports(
+        trials, dgemm_benchmark=args.dgemm_benchmark,
+        triad_benchmark=args.triad_benchmark, confidence=args.confidence)
+    if not reports:
+        print("error: no reportable fingerprint — need unpruned trials of "
+              f"both {args.dgemm_benchmark!r} and {args.triad_benchmark!r}:",
+              file=sys.stderr)
+        for fp, reason in skipped:
+            print(f"  {fp}: {reason}", file=sys.stderr)
+        return 1
+
+    markdown = render_markdown(reports, skipped)
+    if args.out:
+        pathlib.Path(args.out).write_text(markdown, encoding="utf-8")
+        print(f"wrote {args.out}")
+    else:
+        sys.stdout.write(markdown)
+    if args.csv:
+        pathlib.Path(args.csv).write_text(render_csv(reports),
+                                          encoding="utf-8")
+        print(f"wrote {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    import os
+
+    try:
+        sys.exit(main())
+    except BrokenPipeError:
+        # stdout closed early (e.g. piped into `head`) — not an error
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)

@@ -50,7 +50,9 @@ def main() -> int:
     ap.add_argument("--session", required=True,
                     help="session name; trials persist under this name")
     ap.add_argument("--benchmark", default="dgemm",
-                    choices=("dgemm", "triad"))
+                    choices=("dgemm", "triad", "synthetic"),
+                    help="'synthetic' is an instant quadratic objective "
+                         "for smoke-testing sessions without timing noise")
     ap.add_argument("--backend", type=parse_backend, default=None,
                     metavar="SPEC", help="serial | thread[:N] | simulated[:N]")
     ap.add_argument("--order", default="exhaustive",
@@ -64,6 +66,9 @@ def main() -> int:
                     help="do not seed the incumbent from cached trials")
     ap.add_argument("--fresh", action="store_true",
                     help="discard this session's cached trials first")
+    ap.add_argument("--report", action="store_true",
+                    help="after tuning, render the cache-backed roofline "
+                         "dashboard from this session's trial cache")
     args = ap.parse_args()
 
     from benchmarks.common import (dgemm_benchmark, dgemm_space,
@@ -76,12 +81,23 @@ def main() -> int:
                                    use_outer_prune=True)
     if args.benchmark == "dgemm":
         space, benchmark = dgemm_space(quick), dgemm_benchmark
+    elif args.benchmark == "synthetic":
+        from repro.core import grid
+        space = grid(x=tuple(range(12)))
+        benchmark = lambda cfg: (  # noqa: E731
+            lambda: (lambda: 100.0 - (cfg["x"] - 7) ** 2))
     else:
         from repro.core import grid
         sizes = (2 ** 16, 2 ** 20, 2 ** 24) if quick else \
             tuple(2 ** e for e in range(14, 28, 2))
         space = grid(n_bytes=sizes)
         benchmark = lambda cfg: triad_invocation_factory(cfg["n_bytes"])  # noqa: E731
+        # Each TRIAD size probes a different memory subsystem: the sizes
+        # are measurements, not competitors. Pruning a slow DRAM stream
+        # against the cache-resident incumbent would cache a truncated
+        # bandwidth estimate and drop that subsystem from --report.
+        settings = dataclasses.replace(settings, use_inner_prune=False,
+                                       use_outer_prune=False)
 
     cache_path = pathlib.Path(args.cache_dir) / f"{args.session}.jsonl"
     if args.fresh and cache_path.exists():
@@ -114,6 +130,24 @@ def main() -> int:
     print(f"backend   : {result.backend}  workers={result.n_workers}  "
           f"wall={result.parallel_time_s:.2f}s "
           f"(serial-equivalent {result.serial_time_s:.2f}s)")
+    if result.improvements:
+        trail = " -> ".join(f"{score:.2f}"
+                            for _, score in result.improvements)
+        print(f"incumbent : {trail}")
+
+    if args.report:
+        from repro.core import build_reports, load_trials
+        from repro.core.report import render_markdown
+        reports, skipped = build_reports(load_trials(cache_path))
+        if reports:
+            print()
+            print(render_markdown(reports, skipped))
+        else:
+            print("\n[report] nothing to render: the cache needs unpruned "
+                  "'dgemm' and 'triad' trials (run both benchmarks under "
+                  "this session name).")
+            for fp, reason in skipped:
+                print(f"[report]   {fp}: {reason}")
     return 0
 
 

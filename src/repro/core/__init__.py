@@ -3,7 +3,9 @@
 Public API re-exports. See DESIGN.md §2 for the layer map.
 """
 
-from .cache import TrialCache, TuningSession, config_key, hardware_fingerprint
+from .cache import (CACHE_VERSION, BoundCache, CachedTrial, TrialCache,
+                    TuningSession, config_key, hardware_fingerprint,
+                    iter_trials, load_trials)
 from .confidence import (Interval, ReservoirBootstrap, ci_mean,
                          median_of_means, normal_quantile,
                          sign_test_median_ci, t_quantile)
@@ -12,6 +14,10 @@ from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
 from .executor import (ExecutionBackend, ExecutionStats, IncumbentCell,
                        SerialBackend, SimulatedShardedBackend,
                        ThreadPoolBackend, TrialOutcome)
+from .report import (FingerprintReport, IncumbentTrial, build_reports,
+                     dgemm_config_intensity, extract_incumbent,
+                     group_by_fingerprint, pooled_state, render_csv,
+                     render_markdown, trials_from_result, triad_subsystems)
 from .roofline import (TPU_V5E, MachineSpec, RooflineModel, TRIAD_INTENSITY,
                        attainable, from_measurements, operational_intensity,
                        ridge_point)
@@ -25,9 +31,15 @@ from .tuner import (BenchmarkFactory, TrialRecord, Tuner, TuningResult,
 from .welford import WelfordState, from_samples, init, merge, tree_merge, update
 
 __all__ = [
-    "TrialCache", "TuningSession", "config_key", "hardware_fingerprint",
+    "BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
+    "TuningSession", "config_key", "hardware_fingerprint", "iter_trials",
+    "load_trials",
     "Interval", "ReservoirBootstrap", "ci_mean", "median_of_means",
     "normal_quantile", "sign_test_median_ci", "t_quantile",
+    "FingerprintReport", "IncumbentTrial", "build_reports",
+    "dgemm_config_intensity", "extract_incumbent", "group_by_fingerprint",
+    "pooled_state", "render_csv", "render_markdown", "trials_from_result",
+    "triad_subsystems",
     "EvalResult", "EvaluationSettings", "Evaluator", "InvocationResult",
     "timed_sampler",
     "ExecutionBackend", "ExecutionStats", "IncumbentCell", "SerialBackend",

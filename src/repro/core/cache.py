@@ -16,26 +16,39 @@ module provides:
     invocation's Welford moments (count/mean/m2) *exactly* — JSON float
     serialization uses ``repr`` so float64 survives bit-for-bit — which
     keeps downstream parallel Welford merges exact across a resume.
+  * :class:`BoundCache` — a :class:`TrialCache` view fixed to one
+    benchmark name, the shape ``Tuner.tune(cache=...)`` consumes.
   * :class:`TuningSession` — a named run/resume wrapper: restarting a
     killed session skips every already-evaluated config and warm-starts
     the incumbent from the best cached trial so stop-condition-4 pruning
     bites from trial 1.
+  * a read/query layer for reporting: :class:`CachedTrial`,
+    :func:`iter_trials` and :func:`load_trials` read cache files across
+    *all* hardware fingerprints (unlike :class:`TrialCache`, which serves
+    only its own fingerprint), so downstream consumers — notably
+    :mod:`repro.core.report` — can group sessions by benchmark ×
+    fingerprint and assemble roofline dashboards without re-measuring.
+
+The on-disk format is specified in ``docs/cache-format.md``
+(``CACHE_VERSION`` gates compatibility).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
 from pathlib import Path
-from typing import Optional
+from typing import Iterable, Iterator, Optional
 
 from .evaluator import EvalResult, InvocationResult
 from .searchspace import Config
 from .stop_conditions import Direction
 
-__all__ = ["TrialCache", "TuningSession", "config_key",
-           "hardware_fingerprint"]
+__all__ = ["BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
+           "TuningSession", "config_key", "hardware_fingerprint",
+           "iter_trials", "load_trials"]
 
 CACHE_VERSION = 1
 
@@ -43,8 +56,15 @@ _FINGERPRINT: Optional[str] = None
 
 
 def hardware_fingerprint() -> str:
-    """Stable id of this measurement substrate. Computed lazily (touching
-    ``jax.devices()`` initializes the backend) and cached per process."""
+    """Stable id of this measurement substrate, cached per process.
+
+    .. warning:: Computed lazily because the first call touches
+       ``jax.devices()``, which **initializes the jax backend** as a side
+       effect. Call it only after any platform selection
+       (``JAX_PLATFORMS``, ``jax.config.update``) has happened, and never
+       at import time — once the backend is up, platform flags are
+       ignored.
+    """
     global _FINGERPRINT
     if _FINGERPRINT is None:
         import jax
@@ -89,6 +109,67 @@ def _result_from_json(d: dict) -> EvalResult:
         stop_reason=d["stop_reason"])
 
 
+@dataclasses.dataclass(frozen=True)
+class CachedTrial:
+    """One persisted trial, as the reporting layer sees it: unlike the
+    entries :class:`TrialCache` serves back to the tuner, a CachedTrial
+    carries its hardware fingerprint so trials from many machines can
+    coexist in one analysis."""
+
+    benchmark: str
+    fingerprint: str
+    config: Config
+    result: EvalResult
+
+    @property
+    def key(self) -> str:
+        return config_key(self.config)
+
+
+def iter_trials(path: str | os.PathLike) -> Iterator[CachedTrial]:
+    """Yield every readable trial in a cache file, across *all* hardware
+    fingerprints (``TrialCache`` filters to one; reports want them all).
+
+    Tolerates a torn trailing line and skips records whose
+    ``CACHE_VERSION`` does not match. Records are yielded in file order,
+    so re-evaluated configs appear more than once — last one wins; use
+    :func:`load_trials` for the deduplicated view.
+    """
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue   # torn trailing write from a killed run
+            if rec.get("version") != CACHE_VERSION:
+                continue
+            yield CachedTrial(benchmark=rec["benchmark"],
+                              fingerprint=rec["fingerprint"],
+                              config=rec["config"],
+                              result=_result_from_json(rec["result"]))
+
+
+def load_trials(path: str | os.PathLike) -> list[CachedTrial]:
+    """Load the deduplicated trials of a cache file *or* of every
+    ``*.jsonl`` under a directory of session caches.
+
+    Duplicate (benchmark, fingerprint, config) records keep the last
+    occurrence — the same resolution :class:`TrialCache` applies on load —
+    while preserving first-seen order, so incumbent extraction downstream
+    breaks score ties exactly like ``TrialCache.best``.
+    """
+    p = Path(path)
+    files: Iterable[Path] = sorted(p.glob("*.jsonl")) if p.is_dir() else (p,)
+    dedup: dict[tuple[str, str, str], CachedTrial] = {}
+    for f in files:
+        for t in iter_trials(f):
+            dedup[(t.benchmark, t.fingerprint, t.key)] = t
+    return list(dedup.values())
+
+
 class TrialCache:
     """Append-only JSONL store of evaluated trials.
 
@@ -129,6 +210,29 @@ class TrialCache:
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
+
+    # -- query layer (reporting) ----------------------------------------------
+    def benchmarks(self) -> list[str]:
+        """Benchmark names with at least one cached trial, sorted."""
+        with self._lock:
+            return sorted({bench for bench, _ in self._entries})
+
+    def items(self, benchmark: Optional[str] = None,
+              ) -> list[tuple[str, Config, EvalResult]]:
+        """Snapshot of cached trials as (benchmark, config, result) tuples,
+        in insertion order, optionally restricted to one benchmark."""
+        with self._lock:
+            return [(bench, cfg, res)
+                    for (bench, _), (cfg, res) in self._entries.items()
+                    if benchmark is None or bench == benchmark]
+
+    def trials(self) -> list[CachedTrial]:
+        """This cache's entries as :class:`CachedTrial`s (all stamped with
+        the cache's own fingerprint — stale-fingerprint records were
+        dropped on load; use :func:`load_trials` to see every machine)."""
+        return [CachedTrial(benchmark=bench, fingerprint=self.fingerprint,
+                            config=cfg, result=res)
+                for bench, cfg, res in self.items()]
 
     def get(self, benchmark: str, config: Config) -> Optional[EvalResult]:
         with self._lock:

@@ -62,6 +62,9 @@ class IncumbentCell:
         self.direction = direction
         self._score = score
         self._config = config
+        self._history: list[tuple[Optional[Config], float]] = []
+        if score is not None:
+            self._history.append((config, score))
 
     def get(self) -> Optional[float]:
         with self._lock:
@@ -71,6 +74,12 @@ class IncumbentCell:
         with self._lock:
             return self._config, self._score
 
+    def history(self) -> tuple[tuple[Optional[Config], float], ...]:
+        """Every accepted incumbent in acceptance order (a warm-start seed,
+        if any, is entry 0) — the convergence trajectory reports print."""
+        with self._lock:
+            return tuple(self._history)
+
     def offer(self, config: Config, score: float) -> bool:
         """Fold in a candidate; returns True iff it became the incumbent."""
         with self._lock:
@@ -78,6 +87,7 @@ class IncumbentCell:
                                                             self._score):
                 self._score = score
                 self._config = config
+                self._history.append((config, score))
                 return True
             return False
 

@@ -68,6 +68,34 @@ class RooflineModel:
                             self.machine.total_bandwidth(subsystem))
         return "compute" if intensity >= ridge else "memory"
 
+    def percent_of_roof(self, intensity: float, achieved_flops: float,
+                        subsystem: str) -> float:
+        """Measured performance as a percentage of the attainable roof at
+        this intensity — the model-vs-measured gap the dashboards report."""
+        roof = self.attainable(intensity, subsystem)
+        if roof <= 0:
+            return 0.0
+        return 100.0 * achieved_flops / roof
+
+    def gap_table(self, marks: Sequence[tuple[str, float, float]],
+                  ) -> list[dict]:
+        """Model-vs-measured rows for achieved-kernel markers: one row per
+        (marker, memory subsystem) with the attainable roof at the
+        marker's intensity, the %-of-roof gap, and the bound class."""
+        rows = []
+        for label, mi, mf in marks:
+            for sub in self.machine.mem_bandwidths:
+                rows.append({
+                    "kernel": label,
+                    "subsystem": sub,
+                    "intensity_flop_per_byte": mi,
+                    "achieved_flops": mf,
+                    "attainable_flops": self.attainable(mi, sub),
+                    "pct_of_roof": self.percent_of_roof(mi, mf, sub),
+                    "bound": self.bound(mi, sub),
+                })
+        return rows
+
     # -- emission --------------------------------------------------------------
     def curve(self, subsystem: str, i_lo: float = 2 ** -6, i_hi: float = 2 ** 12,
               points_per_decade: int = 8) -> list[tuple[float, float]]:
@@ -87,15 +115,17 @@ class RooflineModel:
                 rows.append(f"{sub},{i:.6g},{f:.6g}")
         return "\n".join(rows)
 
-    def ascii_plot(self, subsystem: str, width: int = 64, height: int = 16,
-                   marks: Sequence[tuple[str, float, float]] = ()) -> str:
-        """Log-log ASCII roofline with optional (label, I, F) markers."""
-        pts = self.curve(subsystem)
-        xs = [math.log2(p[0]) for p in pts]
-        ys = [math.log2(max(p[1], 1.0)) for p in pts]
-        for _, mi, mf in marks:
-            xs.append(math.log2(mi))
-            ys.append(math.log2(max(mf, 1.0)))
+    @staticmethod
+    def _raster(series: Sequence[tuple[str, Sequence[tuple[float, float]]]],
+                point_marks: Sequence[tuple[str, float, float]],
+                width: int, height: int) -> list[str]:
+        """Shared log-log rasterizer: draw each (char, curve) series then
+        each (char, I, F) marker onto one grid, returning the bordered
+        rows. Axes scale to the union of everything drawn."""
+        xs = [math.log2(i) for _, pts in series for i, _ in pts]
+        ys = [math.log2(max(f, 1.0)) for _, pts in series for _, f in pts]
+        xs += [math.log2(i) for _, i, _ in point_marks]
+        ys += [math.log2(max(f, 1.0)) for _, _, f in point_marks]
         x0, x1 = min(xs), max(xs)
         y0, y1 = min(ys), max(ys)
         grid = [[" "] * width for _ in range(height)]
@@ -105,13 +135,62 @@ class RooflineModel:
             cy = int((y - y0) / max(y1 - y0, 1e-9) * (height - 1))
             grid[height - 1 - cy][cx] = ch
 
-        for p in pts:
-            put(math.log2(p[0]), math.log2(max(p[1], 1.0)), "*")
-        for label, mi, mf in marks:
-            put(math.log2(mi), math.log2(max(mf, 1.0)), label[0].upper())
+        for ch, pts in series:
+            for i, f in pts:
+                put(math.log2(i), math.log2(max(f, 1.0)), ch)
+        for ch, mi, mf in point_marks:
+            put(math.log2(mi), math.log2(max(mf, 1.0)), ch)
+        return ["|" + "".join(r) + "|" for r in grid]
+
+    def ascii_plot(self, subsystem: str, width: int = 64, height: int = 16,
+                   marks: Sequence[tuple[str, float, float]] = ()) -> str:
+        """Log-log ASCII roofline of one subsystem with optional
+        (label, I, F) markers (drawn as the label's first letter)."""
+        rows = self._raster([("*", self.curve(subsystem))],
+                            [(label[0].upper(), mi, mf)
+                             for label, mi, mf in marks], width, height)
         header = (f"roofline[{self.machine.name}/{subsystem}] "
                   f"x=log2(I), y=log2(FLOP/s)")
-        return "\n".join([header] + ["|" + "".join(r) + "|" for r in grid])
+        return "\n".join([header] + rows)
+
+    _CURVE_CHARS = "*+x#o@"
+
+    @staticmethod
+    def _mark_chars(labels: Sequence[str]) -> list[str]:
+        """One distinct uppercase character per mark: the first unused
+        alphanumeric of the label, falling back to any unused letter/digit
+        (two 'triad:*' marks must not both render as 'T')."""
+        used: set[str] = set()
+        out = []
+        for label in labels:
+            candidates = [c for c in label.upper() if c.isalnum()]
+            candidates += list("ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789")
+            ch = next((c for c in candidates if c not in used), "?")
+            used.add(ch)
+            out.append(ch)
+        return out
+
+    def dashboard(self, marks: Sequence[tuple[str, float, float]] = (),
+                  width: int = 64, height: int = 16) -> str:
+        """Every memory subsystem's roof on one log-log ASCII grid, with
+        achieved-kernel markers drawn on top (each marker gets its own
+        character, derived from its label)."""
+        series = [(self._CURVE_CHARS[k % len(self._CURVE_CHARS)],
+                   self.curve(sub))
+                  for k, sub in enumerate(self.machine.mem_bandwidths)]
+        mark_chars = self._mark_chars([label for label, _, _ in marks])
+        point_marks = [(ch, mi, mf)
+                       for (_, mi, mf), ch in zip(marks, mark_chars)]
+        legend = [f"{ch}={sub}" for (ch, _), sub
+                  in zip(series, self.machine.mem_bandwidths)]
+        legend += [f"{ch}={label}"
+                   for (label, _, _), ch in zip(marks, mark_chars)]
+        header = (f"roofline[{self.machine.name}] "
+                  f"x=log2(I), y=log2(FLOP/s)")
+        lines = ([header]
+                 + self._raster(series, point_marks, width, height)
+                 + ["legend: " + "  ".join(legend)])
+        return "\n".join(lines)
 
 
 def from_measurements(name: str, measured_peak_flops: float,

@@ -53,6 +53,9 @@ class TuningResult:
     serial_time_s: float = 0.0     # sum of per-trial wall clock
     parallel_time_s: float = 0.0   # run wall clock (simulated: max/worker)
     n_cached: int = 0              # trials served from the cache
+    # incumbent trajectory: every accepted (config, score) in acceptance
+    # order; entry 0 is the warm-start seed when a cache seeded the cell
+    improvements: tuple[tuple[Optional[Config], float], ...] = ()
 
     def summary_row(self) -> dict:
         return {
@@ -138,6 +141,7 @@ class Tuner:
             serial_time_s=stats.serial_time_s,
             parallel_time_s=stats.parallel_time_s,
             n_cached=sum(1 for t in trials if t.cached),
+            improvements=cell.history(),
         )
 
 

@@ -1,0 +1,66 @@
+"""Documentation snippets must execute: every fenced python/bash block in
+README.md and docs/ runs via scripts/check_docs.py (blocks marked
+``<!-- check-docs: skip -->`` are exempt), so examples cannot rot."""
+
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+# dataclasses resolves cls.__module__ through sys.modules at class-creation
+# time, so the module must be registered before exec
+sys.modules["check_docs"] = check_docs
+_spec.loader.exec_module(check_docs)
+
+DOCS = [str(p.relative_to(REPO)) for p in check_docs.default_docs(REPO)]
+
+
+def test_docs_exist():
+    assert "README.md" in DOCS
+    assert any(d.startswith("docs/") for d in DOCS), \
+        "docs/ must contain at least one markdown file"
+
+
+def test_every_doc_has_runnable_snippets():
+    """The checker must actually be exercising something per file."""
+    for doc in DOCS:
+        blocks = check_docs.extract_blocks(
+            (REPO / doc).read_text(encoding="utf-8"))
+        assert any(b.runnable for b in blocks), \
+            f"{doc} has no runnable fenced snippet"
+
+
+def test_extract_blocks_skip_marker():
+    text = ("prose\n"
+            "<!-- check-docs: skip -->\n"
+            "```bash\nexit 1\n```\n"
+            "```python\nx = 1\n```\n"
+            "```text\nnot runnable\n```\n")
+    blocks = check_docs.extract_blocks(text)
+    assert [b.lang for b in blocks] == ["bash", "python", "text"]
+    assert blocks[0].skipped and not blocks[0].runnable
+    assert blocks[1].runnable
+    assert not blocks[2].runnable
+
+
+def test_extract_blocks_info_string_attributes():
+    """A fence like ```python title=x must still parse as python and must
+    not swallow the following block."""
+    text = ("```python title=demo\nx = 1\n```\n"
+            "```bash\necho hi\n```\n")
+    blocks = check_docs.extract_blocks(text)
+    assert [b.lang for b in blocks] == ["python", "bash"]
+    assert all(b.runnable for b in blocks)
+    assert blocks[0].code == "x = 1\n"
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_doc_snippets_execute(doc):
+    failures = check_docs.check_file(REPO / doc)
+    assert not failures, "\n".join(failures)

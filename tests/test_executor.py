@@ -138,3 +138,25 @@ def test_bad_worker_count_rejected():
         ThreadPoolBackend(0)
     with pytest.raises(ValueError):
         SimulatedShardedBackend(0)
+
+
+def test_incumbent_cell_history():
+    cell = IncumbentCell(Direction.MAXIMIZE)
+    cell.offer({"x": 1}, 5.0)
+    cell.offer({"x": 2}, 4.0)                 # rejected: not recorded
+    cell.offer({"x": 3}, 6.0)
+    assert cell.history() == (({"x": 1}, 5.0), ({"x": 3}, 6.0))
+    # a pre-seeded cell (warm start) records the seed as entry 0
+    seeded = IncumbentCell(Direction.MAXIMIZE, score=9.0, config={"x": 9})
+    seeded.offer({"x": 4}, 10.0)
+    assert seeded.history()[0] == ({"x": 9}, 9.0)
+    assert seeded.history()[1] == ({"x": 4}, 10.0)
+
+
+def test_tuning_result_improvements_trajectory():
+    result = Tuner(grid(x=tuple(range(12))), SETTINGS).tune(
+        deterministic_benchmark)
+    scores = [s for _, s in result.improvements]
+    assert scores == sorted(scores)           # monotone for MAXIMIZE
+    assert result.improvements[-1] == (result.best_config,
+                                       result.best_score)

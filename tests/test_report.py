@@ -1,0 +1,307 @@
+"""Cache-backed roofline reporting: query layer, incumbent extraction
+(must match warm-start selection), exact-moment CIs, golden dashboards,
+and the report CLI.
+
+Regenerate the golden files after an intentional rendering change with:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_report.py -q
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (EvaluationSettings, TrialCache, Tuner, TuningSession,
+                        build_reports, ci_mean, extract_incumbent,
+                        group_by_fingerprint, load_trials, welford)
+from repro.core.cache import CachedTrial, iter_trials
+from repro.core.evaluator import EvalResult, InvocationResult
+from repro.core.report import (dgemm_config_intensity, pooled_state,
+                               render_csv, render_markdown,
+                               trials_from_result, triad_subsystems)
+from repro.core.searchspace import grid
+from repro.core.stop_conditions import Direction
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def make_result(score, pruned=False, spreads=(1.0, 2.0)):
+    """Deterministic EvalResult whose invocation moments come from real
+    sample streams (mean of each stream is exactly ``score``)."""
+    invs = []
+    samples = 0
+    for off in spreads:
+        st = welford.from_samples([score - off, score + off])
+        samples += int(st.count)
+        invs.append(InvocationResult(mean=float(st.mean), count=int(st.count),
+                                     elapsed_s=0.125, pruned=False,
+                                     stop_reason="max_count(2)",
+                                     m2=float(st.m2)))
+    return EvalResult(score=score, best_invocation=score,
+                      invocations=tuple(invs), total_samples=samples,
+                      total_time_s=0.25, measured_time_s=0.25,
+                      pruned=pruned, stop_reason="max_count(2)")
+
+
+def synthetic_trials():
+    """Two complete fingerprints + one triad-only fingerprint (skipped)."""
+    return [
+        CachedTrial("dgemm", "fpA", {"n": 256, "m": 256, "k": 64},
+                    make_result(80.0)),
+        CachedTrial("dgemm", "fpA", {"n": 512, "m": 512, "k": 128},
+                    make_result(120.0)),
+        CachedTrial("dgemm", "fpA", {"n": 1024, "m": 1024, "k": 512},
+                    make_result(999.0, pruned=True)),   # pruned: never wins
+        CachedTrial("triad", "fpA", {"n_bytes": 1 << 22}, make_result(40.0)),
+        CachedTrial("triad", "fpA", {"n_bytes": 1 << 28}, make_result(10.0)),
+        CachedTrial("dgemm", "fpB", {"n": 512, "m": 512, "k": 128},
+                    make_result(900.0)),
+        CachedTrial("triad", "fpB", {"n_bytes": 1 << 22}, make_result(300.0)),
+        CachedTrial("triad", "fpB", {"n_bytes": 1 << 28}, make_result(100.0)),
+        CachedTrial("triad", "fpC", {"n_bytes": 1 << 22}, make_result(55.0)),
+    ]
+
+
+def write_cache(path, trials):
+    for t in trials:
+        TrialCache(path, fingerprint=t.fingerprint).put(
+            t.benchmark, t.config, t.result)
+
+
+# ---------------------------------------------------------------------------
+# Query layer
+# ---------------------------------------------------------------------------
+
+
+def test_iter_trials_reads_across_fingerprints(tmp_path):
+    path = tmp_path / "c.jsonl"
+    write_cache(path, synthetic_trials())
+    got = list(iter_trials(path))
+    assert len(got) == len(synthetic_trials())
+    assert {t.fingerprint for t in got} == {"fpA", "fpB", "fpC"}
+    # TrialCache by contrast only serves its own fingerprint
+    assert len(TrialCache(path, fingerprint="fpA")) == 5
+
+
+def test_load_trials_last_wins_dedup(tmp_path):
+    path = tmp_path / "c.jsonl"
+    cache = TrialCache(path, fingerprint="fp")
+    cache.put("b", {"x": 1}, make_result(10.0))
+    cache.put("b", {"x": 1}, make_result(20.0))   # re-run overwrites
+    cache.put("b", {"x": 2}, make_result(5.0))
+    got = load_trials(path)
+    assert len(got) == 2
+    assert got[0].result.score == 20.0            # last record won
+    assert [t.config for t in got] == [{"x": 1}, {"x": 2}]  # order kept
+
+
+def test_load_trials_directory_of_sessions(tmp_path):
+    write_cache(tmp_path / "s1.jsonl", synthetic_trials()[:2])
+    write_cache(tmp_path / "s2.jsonl", synthetic_trials()[5:6])
+    got = load_trials(tmp_path)
+    assert len(got) == 3
+    assert load_trials(tmp_path / "s1.jsonl") == got[:2]
+
+
+def test_trial_cache_query_methods(tmp_path):
+    path = tmp_path / "c.jsonl"
+    write_cache(path, synthetic_trials())
+    cache = TrialCache(path, fingerprint="fpA")
+    assert cache.benchmarks() == ["dgemm", "triad"]
+    assert len(cache.items("triad")) == 2
+    assert all(t.fingerprint == "fpA" for t in cache.trials())
+
+
+def test_version_mismatch_skipped(tmp_path):
+    path = tmp_path / "c.jsonl"
+    write_cache(path, synthetic_trials()[:1])
+    text = path.read_text().replace('"version": 1', '"version": 99')
+    path.write_text(text)
+    assert list(iter_trials(path)) == []
+
+
+# ---------------------------------------------------------------------------
+# Incumbent extraction == warm-start selection
+# ---------------------------------------------------------------------------
+
+
+def counting_benchmark(cfg):
+    mu = 100.0 - (cfg["x"] - 5) ** 2
+    return lambda: (lambda: mu)
+
+
+SETTINGS = EvaluationSettings(max_invocations=2, max_iterations=10,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+
+def test_extract_incumbent_matches_session_warm_start(tmp_path):
+    """The report layer must name the same winner a resumed TuningSession
+    warm-starts from (TrialCache.best)."""
+    session = TuningSession("s", Tuner(grid(x=tuple(range(8))), SETTINGS),
+                            counting_benchmark, cache_dir=tmp_path,
+                            fingerprint="fp", benchmark_name="bench")
+    result = session.run()
+    trials = load_trials(tmp_path / "s.jsonl")
+    inc = extract_incumbent(trials, "bench", Direction.MAXIMIZE)
+    warm = session.cache.best("bench", Direction.MAXIMIZE)
+    assert warm is not None and inc is not None
+    assert (inc.config, inc.score) == warm
+    assert inc.config == result.best_config
+    assert inc.score == result.best_score
+
+
+def test_extract_incumbent_skips_pruned_and_other_benchmarks():
+    trials = synthetic_trials()
+    fpA = group_by_fingerprint(trials)["fpA"]
+    inc = extract_incumbent(fpA, "dgemm")
+    assert inc.score == 120.0                 # not the pruned 999.0
+    assert extract_incumbent(fpA, "missing") is None
+
+
+def test_pooled_state_exact_roundtrip(tmp_path):
+    """CI recovered from cached moments == CI over the raw sample stream."""
+    res = make_result(100.0, spreads=(0.5, 1.5, 2.5))
+    path = tmp_path / "c.jsonl"
+    TrialCache(path, fingerprint="fp").put("b", {"x": 1}, res)
+    hit = TrialCache(path, fingerprint="fp").get("b", {"x": 1})
+    raw = []
+    for off in (0.5, 1.5, 2.5):
+        raw += [100.0 - off, 100.0 + off]
+    assert ci_mean(pooled_state(hit), 0.99) == \
+        ci_mean(welford.from_samples(raw), 0.99)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark interpretation
+# ---------------------------------------------------------------------------
+
+
+def test_dgemm_config_intensity():
+    # n=m=k=1024 f32: 2*1024^3 / (3*1024^2*4)
+    i = dgemm_config_intensity({"n": 1024, "m": 1024, "k": 1024})
+    assert abs(i - 2 * 1024 / 12.0) < 1e-9
+    assert dgemm_config_intensity({"x": 3}) is None
+
+
+def test_triad_subsystems_per_config():
+    subs = triad_subsystems(synthetic_trials(), "triad")
+    # grouped across fingerprints only when caller doesn't pre-group;
+    # here fpB's 300 GB/s wins the 4MiB bucket
+    assert set(subs) == {"mem[4MiB]", "mem[256MiB]"}
+    assert subs["mem[4MiB]"].score == 300.0
+    fpA = group_by_fingerprint(synthetic_trials())["fpA"]
+    assert triad_subsystems(fpA, "triad")["mem[4MiB]"].score == 40.0
+
+
+# ---------------------------------------------------------------------------
+# Report assembly + golden dashboards
+# ---------------------------------------------------------------------------
+
+
+def test_build_reports_structure():
+    reports, skipped = build_reports(synthetic_trials())
+    assert [r.fingerprint for r in reports] == ["fpA", "fpB"]
+    assert skipped == [("fpC", "no unpruned 'dgemm' trials")]
+    fpA = reports[0]
+    assert fpA.peak_flops == 120.0e9
+    assert dict(fpA.bandwidths)["mem[4MiB]"].score == 40.0
+    labels = [label for label, _, _ in fpA.marks]
+    assert labels == ["dgemm", "triad:mem[256MiB]", "triad:mem[4MiB]"]
+    # triad marks gap only against their own subsystem; dgemm against all
+    gap = fpA.gap_rows()
+    assert sum(1 for g in gap if g["kernel"] == "dgemm") == 2
+    triad_rows = [g for g in gap if g["kernel"].startswith("triad:")]
+    assert all(g["kernel"].endswith(g["subsystem"]) for g in triad_rows)
+    # TRIAD sits on its own slope by construction: 100% of its roof
+    assert all(abs(g["pct_of_roof"] - 100.0) < 1e-9 for g in triad_rows)
+
+
+def _assert_matches_golden(name, text):
+    golden = GOLDEN_DIR / name
+    if os.environ.get("REGEN_GOLDEN"):
+        golden.parent.mkdir(parents=True, exist_ok=True)
+        golden.write_text(text, encoding="utf-8")
+        pytest.skip(f"regenerated {golden}")
+    assert golden.exists(), \
+        f"missing golden file {golden}; run with REGEN_GOLDEN=1"
+    assert text == golden.read_text(encoding="utf-8"), \
+        f"{name} drifted from golden; REGEN_GOLDEN=1 if intentional"
+
+
+def test_markdown_dashboard_matches_golden():
+    reports, skipped = build_reports(synthetic_trials())
+    md = render_markdown(reports, skipped)
+    assert "ASCII" not in md  # sanity: plot is embedded, not described
+    for section in ("# Cache-backed roofline dashboard",
+                    "## Fingerprint `fpA`", "## Fingerprint `fpB`",
+                    "```text", "### Model vs measured (% of roof)",
+                    "## Fingerprint comparison",
+                    "## Skipped fingerprints"):
+        assert section in md
+    _assert_matches_golden("roofline_report.md", md)
+
+
+def test_csv_dashboard_matches_golden():
+    reports, _ = build_reports(synthetic_trials())
+    csv = render_csv(reports)
+    header, *rows = csv.splitlines()
+    assert header == ("fingerprint,kind,name,intensity_flop_per_byte,"
+                      "value,pct_of_roof,config")
+    kinds = {r.split(",")[1] for r in rows}
+    assert kinds == {"peak_flops", "bandwidth", "curve", "mark", "gap"}
+    assert all(len(r.split(",")) == 7 for r in rows)  # no embedded commas
+    _assert_matches_golden("roofline_report.csv", csv)
+
+
+def test_trials_from_result_roundtrip():
+    result = Tuner(grid(x=tuple(range(8))), SETTINGS).tune(
+        counting_benchmark)
+    trials = trials_from_result(result, "bench", "fp-mem")
+    assert len(trials) == len(result.trials)
+    inc = extract_incumbent(trials, "bench")
+    assert inc.config == result.best_config
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "roofline_report.py"),
+         *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=120)
+
+
+def test_cli_emits_dashboard_and_csv(tmp_path):
+    cache = tmp_path / "nightly.jsonl"
+    write_cache(cache, synthetic_trials())
+    out_csv = tmp_path / "roofline.csv"
+    proc = _run_cli(cache, "--csv", out_csv)
+    assert proc.returncode == 0, proc.stderr
+    assert "# Cache-backed roofline dashboard" in proc.stdout
+    assert "## Fingerprint comparison" in proc.stdout
+    assert "- `fpC`: no unpruned 'dgemm' trials" in proc.stdout
+    assert out_csv.read_text().startswith("fingerprint,kind,name,")
+
+
+def test_cli_refuses_unreportable_cache(tmp_path):
+    cache = tmp_path / "triad-only.jsonl"
+    write_cache(cache, synthetic_trials()[8:])   # fpC only
+    proc = _run_cli(cache)
+    assert proc.returncode == 1
+    assert "no unpruned 'dgemm' trials" in proc.stderr
+
+
+def test_cli_missing_path():
+    proc = _run_cli("/nonexistent/cache.jsonl")
+    assert proc.returncode == 2

@@ -86,3 +86,33 @@ def test_parse_collectives_counts_and_bytes():
 def test_parse_collectives_empty():
     stats = parse_collectives("%r = f32[4]{0} add(%a, %b)", 8)
     assert stats.total_bytes == 0 and stats.summary() == "none"
+
+
+def test_percent_of_roof():
+    model = from_measurements("test", 100e12, {"dram": 800e9})
+    # memory-bound point: roof is B*I
+    assert abs(model.percent_of_roof(1.0, 400e9, "dram") - 50.0) < 1e-9
+    # compute-bound point: roof is Fp
+    assert abs(model.percent_of_roof(1e4, 100e12, "dram") - 100.0) < 1e-9
+
+
+def test_gap_table_rows():
+    model = from_measurements("test", 100e12, {"l3": 8e12, "dram": 800e9})
+    rows = model.gap_table([("dgemm", 1000.0, 90e12)])
+    assert len(rows) == 2                      # one row per subsystem
+    by_sub = {r["subsystem"]: r for r in rows}
+    assert by_sub["dram"]["bound"] == "compute"
+    assert abs(by_sub["dram"]["pct_of_roof"] - 90.0) < 1e-9
+    assert by_sub["dram"]["attainable_flops"] == 100e12
+
+
+def test_dashboard_multi_subsystem():
+    model = from_measurements("test", 1e12, {"l3": 1e11, "dram": 1e10})
+    art = model.dashboard(marks=[("dgemm", 64.0, 9e11)])
+    assert "roofline[test]" in art
+    assert "legend:" in art and "*=l3" in art and "+=dram" in art
+    assert "D=dgemm" in art
+    grid_lines = art.splitlines()[1:-1]
+    assert any("D" in line for line in grid_lines)  # marker actually drawn
+    # deterministic: same inputs, same art
+    assert art == model.dashboard(marks=[("dgemm", 64.0, 9e11)])
