@@ -1,22 +1,32 @@
-"""Beyond-paper: execution backends for the CI-pruned search.
+"""Beyond-paper: execution backends and search strategies for the
+CI-pruned search.
 
-Runs the same DGEMM search under the three execution backends — serial
-(the paper's loop), thread-pool (live incumbent sharing), and the
-simulated fleet with per-round incumbent all-reduce — and reports each
-backend's wall-clock, sample count, and found optimum. (On a shared host
-concurrent timing perturbs the measured GFLOP/s, so backends can disagree
-on noisy hardware; the deterministic-equivalence guarantee is asserted in
-``tests/test_executor.py``.) With a
-``cache_dir`` (``benchmarks.run --resume``) every backend's trials persist
-to a named session and reruns skip completed configs."""
+Part one runs the same exhaustive DGEMM search under the execution
+backends — serial (the paper's loop), thread-pool (live incumbent
+sharing), process-pool (GIL escape, per-batch incumbent all-reduce), and
+the simulated fleet — and reports each backend's wall-clock, sample
+count, and found optimum. (On a shared host concurrent timing perturbs
+the measured GFLOP/s, so backends can disagree on noisy hardware; the
+deterministic-equivalence guarantee is asserted in
+``tests/test_strategy.py``.) Part two compares the search *strategies* —
+exhaustive, successive halving, budgeted random, neighborhood hill-climb
+— through the same engine, reporting how many trials/samples each policy
+spends to locate its optimum. With a ``cache_dir``
+(``benchmarks.run --resume``) every variant's trials persist to a named
+session and reruns skip completed configs — except halving, whose rung
+trials carry per-rung settings overrides and are persisted but never
+replayed (serving a truncated rung as a full result would corrupt the
+budget schedule)."""
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-from repro.core import (ThreadPoolBackend, TrialCache, Tuner,
-                        SimulatedShardedBackend)
+from repro.core import (NeighborhoodStrategy, ProcessPoolBackend,
+                        RandomSearchStrategy, SimulatedShardedBackend,
+                        SuccessiveHalvingStrategy, ThreadPoolBackend,
+                        TrialCache, Tuner)
 
 from .common import dgemm_benchmark, dgemm_space, emit, paper_settings, print_table
 
@@ -29,9 +39,11 @@ def run(quick: bool = True, cache_dir: Optional[str] = None) -> list[dict]:
                                    use_outer_prune=True)
     backends = [("serial", None),
                 ("thread4", ThreadPoolBackend(4)),
+                ("process4", ProcessPoolBackend(4)),
                 ("simulated4", SimulatedShardedBackend(4)),
                 ("simulated16", SimulatedShardedBackend(16))]
     rows = []
+    serial_result = None
     serial_wall = None
     for name, backend in backends:
         cache = None
@@ -48,6 +60,8 @@ def run(quick: bool = True, cache_dir: Optional[str] = None) -> list[dict]:
         replay = result.n_cached == len(result.trials)
         if serial_wall is None and not replay:
             serial_wall = wall
+        if name == "serial":
+            serial_result = result
         if replay:
             speedup = "cached"
         elif serial_wall is None:
@@ -69,7 +83,52 @@ def run(quick: bool = True, cache_dir: Optional[str] = None) -> list[dict]:
              f";cached={result.n_cached}" + (";replay" if replay else ""))
     print_table("Beyond-paper: execution backends for CI-pruned search",
                 rows)
+    rows += run_strategies(space, settings, quick=quick, cache_dir=cache_dir,
+                           exhaustive=serial_result)
     return rows
+
+
+def run_strategies(space, settings, quick: bool = True,
+                   cache_dir: Optional[str] = None,
+                   exhaustive=None) -> list[dict]:
+    """Strategy comparison through the shared engine (serial backend, so
+    trial/sample counts are scheduling-independent). The exhaustive row
+    reuses the backend table's serial run when available."""
+    budget = max(4, space.cardinality // 3)
+    strategies = [("halving", SuccessiveHalvingStrategy()),
+                  ("random", RandomSearchStrategy(budget=budget, seed=0)),
+                  ("neighborhood", NeighborhoodStrategy(budget=budget))]
+    rows = []
+    if exhaustive is not None:
+        rows.append(_strategy_row("exhaustive", exhaustive))
+    for name, strategy in strategies:
+        cache = None
+        if cache_dir is not None:
+            cache = TrialCache(f"{cache_dir}/dgemm-strat-{name}.jsonl").bound(
+                f"dgemm-strat-{name}")
+        result = Tuner(space, settings, strategy=strategy).tune(
+            dgemm_benchmark, cache=cache)
+        rows.append(_strategy_row(name, result))
+        emit(f"distributed_tuner/strategy_{name}",
+             result.parallel_time_s * 1e6,
+             f"gflops={result.best_score:.1f};trials={len(result.trials)}"
+             f";samples={result.total_samples}")
+    print_table("Beyond-paper: search strategies through the shared engine",
+                rows)
+    return rows
+
+
+def _strategy_row(name, result) -> dict:
+    return {
+        "strategy": name,
+        "best_dims": _d(result.best_config),
+        "gflops": round(result.best_score, 1),
+        "trials": len(result.trials),
+        "rounds": len(result.batches),
+        "samples": result.total_samples,
+        "pruned": result.n_pruned,
+        "wall_s": round(result.parallel_time_s, 2),
+    }
 
 
 def _d(cfg):

@@ -120,3 +120,22 @@ def paper_settings(quick: bool = True) -> EvaluationSettings:
 
 def dgemm_benchmark(cfg: dict) -> Callable:
     return dgemm_invocation_factory(cfg["n"], cfg["m"], cfg["k"])
+
+
+def triad_benchmark(cfg: dict) -> Callable:
+    return triad_invocation_factory(cfg["n_bytes"])
+
+
+def synthetic_benchmark(cfg: dict) -> Callable:
+    """Instant quadratic objective (optimum x=7, score 100) for
+    smoke-testing session mechanics without timing noise.
+
+    The three CLI benchmarks are module-level functions (not lambdas) so
+    they pickle into ``ProcessPoolBackend`` workers.
+    """
+    mu = 100.0 - (cfg["x"] - 7) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory

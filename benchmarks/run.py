@@ -28,7 +28,8 @@ BENCHES = {
     "size_sweep": bench_size_sweep.run,            # Fig. 6
     "roofline_model": bench_roofline_model.run,    # Fig. 1
     "kernel_autotune": bench_kernel_autotune.run,  # beyond-paper
-    "distributed_tuner": bench_distributed_tuner.run,  # beyond-paper
+    # beyond-paper: execution backends + search-strategy comparison
+    "distributed_tuner": bench_distributed_tuner.run,
 }
 
 

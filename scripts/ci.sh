@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One-command CI gate: byte-compile everything, run the tier-1 suite,
+# then execute every fenced doc snippet.
+#
+#     bash scripts/ci.sh            # ~5 min on the reference container
+#
+# compileall runs first (seconds, catches syntax errors before the slow
+# pytest pass); check_docs.py runs last and also executes inside tier-1
+# via tests/test_docs.py, so a standalone failure here without a pytest
+# failure means the docs changed after the suite was last green.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compileall =="
+python -m compileall -q src scripts benchmarks examples tests
+
+echo "== tier-1 pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== doc snippets =="
+python scripts/check_docs.py
+
+echo "== ci.sh: all green =="

@@ -4,12 +4,20 @@
     PYTHONPATH=src python scripts/tune.py --session nightly-dgemm
     PYTHONPATH=src python scripts/tune.py --session nightly-dgemm \
         --backend thread:8 --order reverse --full
+    PYTHONPATH=src python scripts/tune.py --session adaptive \
+        --strategy neighborhood --budget 16 --transfer-from nightly-dgemm
 
 Trials persist to ``<cache-dir>/<session>.jsonl`` keyed by (benchmark,
 config, hardware fingerprint); re-running the same session skips every
 completed config and warm-starts the incumbent from the best cached trial,
 so a killed run resumes exactly where it stopped. ``--fresh`` discards the
-session's cache first.
+session's cache first. ``--strategy`` picks the search policy (exhaustive,
+halving, random, neighborhood), ``--budget`` caps random/neighborhood
+proposals, and ``--transfer-from SESSION[:BENCHMARK]`` seeds the search
+with another session's cached incumbents (transfer tuning). Halving rung
+trials are persisted but never replayed on resume: they are measured
+under per-rung budgets, and records only satisfy cache reads made under
+the same evaluation settings.
 """
 
 from __future__ import annotations
@@ -25,23 +33,42 @@ for p in (str(_REPO), str(_REPO / "src")):
 
 import dataclasses  # noqa: E402
 
-from repro.core import (SerialBackend, SimulatedShardedBackend,  # noqa: E402
-                        ThreadPoolBackend, Tuner, TuningSession,
+from repro.core import (NeighborhoodStrategy, ProcessPoolBackend,  # noqa: E402
+                        RandomSearchStrategy, SerialBackend,
+                        SimulatedShardedBackend, SuccessiveHalvingStrategy,
+                        ThreadPoolBackend, TrialCache, Tuner, TuningSession,
                         hardware_fingerprint)
+
+STRATEGIES = ("exhaustive", "halving", "random", "neighborhood")
 
 
 def parse_backend(spec: str):
-    """'serial', 'thread:N', or 'simulated:N'."""
+    """'serial', 'thread:N', 'process:N', or 'simulated:N'."""
     kind, _, arg = spec.partition(":")
     n = int(arg) if arg else 4
     if kind == "serial":
         return SerialBackend()
     if kind == "thread":
         return ThreadPoolBackend(n)
+    if kind == "process":
+        return ProcessPoolBackend(n)
     if kind == "simulated":
         return SimulatedShardedBackend(n)
     raise argparse.ArgumentTypeError(
-        f"unknown backend {spec!r} (serial | thread[:N] | simulated[:N])")
+        f"unknown backend {spec!r} "
+        "(serial | thread[:N] | process[:N] | simulated[:N])")
+
+
+def make_strategy(args):
+    """Build the SearchStrategy the CLI flags describe (None — let the
+    Tuner default to the exhaustive strategy honoring --order/--seed)."""
+    if args.strategy == "exhaustive":
+        return None
+    if args.strategy == "halving":
+        return SuccessiveHalvingStrategy()
+    if args.strategy == "random":
+        return RandomSearchStrategy(budget=args.budget, seed=args.seed)
+    return NeighborhoodStrategy(budget=args.budget)
 
 
 def main() -> int:
@@ -54,11 +81,20 @@ def main() -> int:
                     help="'synthetic' is an instant quadratic objective "
                          "for smoke-testing sessions without timing noise")
     ap.add_argument("--backend", type=parse_backend, default=None,
-                    metavar="SPEC", help="serial | thread[:N] | simulated[:N]")
+                    metavar="SPEC",
+                    help="serial | thread[:N] | process[:N] | simulated[:N]")
+    ap.add_argument("--strategy", default="exhaustive", choices=STRATEGIES,
+                    help="search strategy (see docs/strategies.md)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max proposals for --strategy random/neighborhood")
+    ap.add_argument("--transfer-from", default=None, metavar="SESSION[:BENCH]",
+                    help="seed the search with another session's cached "
+                         "incumbents (default: same benchmark name)")
     ap.add_argument("--order", default="exhaustive",
-                    choices=("exhaustive", "reverse", "random"))
+                    choices=("exhaustive", "reverse", "random"),
+                    help="visit order for --strategy exhaustive")
     ap.add_argument("--seed", type=int, default=None,
-                    help="shuffle seed for --order random")
+                    help="shuffle seed for --order/--strategy random")
     ap.add_argument("--full", action="store_true",
                     help="paper Table I budgets instead of quick budgets")
     ap.add_argument("--cache-dir", default=".tuning_sessions")
@@ -72,7 +108,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks.common import (dgemm_benchmark, dgemm_space,
-                                   paper_settings, triad_invocation_factory)
+                                   paper_settings, synthetic_benchmark,
+                                   triad_benchmark)
 
     quick = not args.full
     settings = dataclasses.replace(paper_settings(quick),
@@ -84,14 +121,13 @@ def main() -> int:
     elif args.benchmark == "synthetic":
         from repro.core import grid
         space = grid(x=tuple(range(12)))
-        benchmark = lambda cfg: (  # noqa: E731
-            lambda: (lambda: 100.0 - (cfg["x"] - 7) ** 2))
+        benchmark = synthetic_benchmark
     else:
         from repro.core import grid
         sizes = (2 ** 16, 2 ** 20, 2 ** 24) if quick else \
             tuple(2 ** e for e in range(14, 28, 2))
         space = grid(n_bytes=sizes)
-        benchmark = lambda cfg: triad_invocation_factory(cfg["n_bytes"])  # noqa: E731
+        benchmark = triad_benchmark
         # Each TRIAD size probes a different memory subsystem: the sizes
         # are measurements, not competitors. Pruning a slow DRAM stream
         # against the cache-resident incumbent would cache a truncated
@@ -103,13 +139,33 @@ def main() -> int:
     if args.fresh and cache_path.exists():
         cache_path.unlink()
 
-    tuner = Tuner(space, settings, order=args.order, seed=args.seed)
+    strategy = make_strategy(args)
+    if strategy is None:
+        tuner = Tuner(space, settings, order=args.order, seed=args.seed)
+    else:
+        tuner = Tuner(space, settings, strategy=strategy)
     session = TuningSession(args.session, tuner, benchmark,
                             cache_dir=args.cache_dir,
                             warm_start=not args.no_warm_start,
                             benchmark_name=args.benchmark)
+
+    seeds = []
+    if args.transfer_from is not None:
+        source, _, source_bench = args.transfer_from.partition(":")
+        source_bench = source_bench or args.benchmark
+        source_path = pathlib.Path(args.cache_dir) / f"{source}.jsonl"
+        if source_path.exists():
+            donor = TrialCache(source_path)
+            seeds = donor.suggest_seeds(source_bench,
+                                        direction=settings.direction)
+        print(f"transfer   : {len(seeds)} seed(s) from session "
+              f"{source!r} (benchmark {source_bench!r})")
+
     print(f"session    : {args.session}  ({cache_path})")
     print(f"fingerprint: {hardware_fingerprint()}")
+    print(f"strategy   : {args.strategy}"
+          + (f" (order={args.order})" if args.strategy == "exhaustive" else "")
+          + (f" (budget={args.budget})" if args.budget is not None else ""))
     print(f"space      : {space!r}  ({space.cardinality} configs)")
     print(f"cached     : {len(session.cache)} trials "
           f"({session.cache.n_stale} stale skipped)")
@@ -123,10 +179,13 @@ def main() -> int:
         print(f"  [{done:4d}/{space.cardinality}] {cfg} -> {tag} "
               f"({res.stop_reason})")
 
-    result = session.run(backend=args.backend, progress=progress)
+    result = session.run(backend=args.backend, progress=progress,
+                         seeds=seeds)
     print(f"\nbest      : {result.best_config}  score={result.best_score}")
     print(f"trials    : {len(result.trials)}  cached={result.n_cached}  "
           f"pruned={result.n_pruned}  samples={result.total_samples}")
+    print(f"strategy  : {result.strategy}  rounds={len(result.batches)}  "
+          f"seeded={result.n_seeded}")
     print(f"backend   : {result.backend}  workers={result.n_workers}  "
           f"wall={result.parallel_time_s:.2f}s "
           f"(serial-equivalent {result.serial_time_s:.2f}s)")

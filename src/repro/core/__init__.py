@@ -5,15 +5,16 @@ Public API re-exports. See DESIGN.md §2 for the layer map.
 
 from .cache import (CACHE_VERSION, BoundCache, CachedTrial, TrialCache,
                     TuningSession, config_key, hardware_fingerprint,
-                    iter_trials, load_trials)
+                    iter_trials, load_trials, settings_key)
 from .confidence import (Interval, ReservoirBootstrap, ci_mean,
                          median_of_means, normal_quantile,
                          sign_test_median_ci, t_quantile)
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
                         InvocationResult, timed_sampler)
-from .executor import (ExecutionBackend, ExecutionStats, IncumbentCell,
-                       SerialBackend, SimulatedShardedBackend,
-                       ThreadPoolBackend, TrialOutcome)
+from .executor import (Batch, BatchStats, ExecutionBackend, ExecutionStats,
+                       IncumbentCell, ProcessPoolBackend, SerialBackend,
+                       SimulatedShardedBackend, ThreadPoolBackend,
+                       TrialOutcome)
 from .report import (FingerprintReport, IncumbentTrial, build_reports,
                      dgemm_config_intensity, extract_incumbent,
                      group_by_fingerprint, pooled_state, render_csv,
@@ -26,14 +27,18 @@ from .searchspace import (Config, Param, SearchSpace, doubling_from, grid,
 from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
                               MaxTime, StopCondition, StopDecision,
                               UpperBoundPrune)
-from .tuner import (BenchmarkFactory, TrialRecord, Tuner, TuningResult,
-                    compare_techniques, standard_techniques)
+from .strategy import (ExhaustiveStrategy, NeighborhoodStrategy,
+                       RandomSearchStrategy, SearchStrategy,
+                       SuccessiveHalvingStrategy)
+from .tuner import (BenchmarkFactory, EvaluateTask, TrialRecord, Tuner,
+                    TuningResult, compare_techniques, standard_techniques,
+                    tune_successive_halving)
 from .welford import WelfordState, from_samples, init, merge, tree_merge, update
 
 __all__ = [
     "BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
     "TuningSession", "config_key", "hardware_fingerprint", "iter_trials",
-    "load_trials",
+    "load_trials", "settings_key",
     "Interval", "ReservoirBootstrap", "ci_mean", "median_of_means",
     "normal_quantile", "sign_test_median_ci", "t_quantile",
     "FingerprintReport", "IncumbentTrial", "build_reports",
@@ -42,7 +47,8 @@ __all__ = [
     "triad_subsystems",
     "EvalResult", "EvaluationSettings", "Evaluator", "InvocationResult",
     "timed_sampler",
-    "ExecutionBackend", "ExecutionStats", "IncumbentCell", "SerialBackend",
+    "Batch", "BatchStats", "ExecutionBackend", "ExecutionStats",
+    "IncumbentCell", "ProcessPoolBackend", "SerialBackend",
     "SimulatedShardedBackend", "ThreadPoolBackend", "TrialOutcome",
     "TPU_V5E", "MachineSpec", "RooflineModel", "TRIAD_INTENSITY", "attainable",
     "from_measurements", "operational_intensity", "ridge_point",
@@ -50,7 +56,10 @@ __all__ = [
     "powers_of_two",
     "CIConverged", "Direction", "EvalContext", "MaxCount", "MaxTime",
     "StopCondition", "StopDecision", "UpperBoundPrune",
-    "BenchmarkFactory", "TrialRecord", "Tuner", "TuningResult",
-    "compare_techniques", "standard_techniques",
+    "ExhaustiveStrategy", "NeighborhoodStrategy", "RandomSearchStrategy",
+    "SearchStrategy", "SuccessiveHalvingStrategy",
+    "BenchmarkFactory", "EvaluateTask", "TrialRecord", "Tuner",
+    "TuningResult", "compare_techniques", "standard_techniques",
+    "tune_successive_halving",
     "WelfordState", "from_samples", "init", "merge", "tree_merge", "update",
 ]

@@ -36,6 +36,7 @@ The on-disk format is specified in ``docs/cache-format.md``
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import threading
@@ -48,7 +49,7 @@ from .stop_conditions import Direction
 
 __all__ = ["BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
            "TuningSession", "config_key", "hardware_fingerprint",
-           "iter_trials", "load_trials"]
+           "iter_trials", "load_trials", "settings_key"]
 
 CACHE_VERSION = 1
 
@@ -78,6 +79,20 @@ def config_key(config: Config) -> str:
     """Canonical JSON key of a configuration (order-insensitive)."""
     return json.dumps(config, sort_keys=True, separators=(",", ":"),
                       default=str)
+
+
+def settings_key(settings) -> str:
+    """Short stable fingerprint of an :class:`EvaluationSettings`.
+
+    A trial is only as good as the budget it was measured under: a
+    successive-halving rung evaluated at ``max_iterations=4`` must never
+    be served back as a full-budget result. Records carry this key so
+    cache reads can demand settings parity; records written before the
+    key existed (or by hand) have none and match any request.
+    """
+    d = dataclasses.asdict(settings)
+    blob = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode("utf-8")).hexdigest()[:12]
 
 
 def _result_to_json(result: EvalResult) -> dict:
@@ -114,12 +129,14 @@ class CachedTrial:
     """One persisted trial, as the reporting layer sees it: unlike the
     entries :class:`TrialCache` serves back to the tuner, a CachedTrial
     carries its hardware fingerprint so trials from many machines can
-    coexist in one analysis."""
+    coexist in one analysis, plus the name of the search strategy that
+    produced it (``None`` for records predating the strategy layer)."""
 
     benchmark: str
     fingerprint: str
     config: Config
     result: EvalResult
+    strategy: Optional[str] = None
 
     @property
     def key(self) -> str:
@@ -149,7 +166,8 @@ def iter_trials(path: str | os.PathLike) -> Iterator[CachedTrial]:
             yield CachedTrial(benchmark=rec["benchmark"],
                               fingerprint=rec["fingerprint"],
                               config=rec["config"],
-                              result=_result_from_json(rec["result"]))
+                              result=_result_from_json(rec["result"]),
+                              strategy=rec.get("strategy"))
 
 
 def load_trials(path: str | os.PathLike) -> list[CachedTrial]:
@@ -183,8 +201,20 @@ class TrialCache:
         self.path = Path(path)
         self.fingerprint = fingerprint or hardware_fingerprint()
         self._lock = threading.Lock()
-        # (benchmark, config_key) -> (config, EvalResult)
-        self._entries: dict[tuple[str, str], tuple[Config, EvalResult]] = {}
+        # settings-keyed store: records measured under different
+        # EvaluationSettings coexist — a halving rung's truncated trial
+        # never shadows (or is shadowed by) a full-budget record of the
+        # same config.
+        # (benchmark, config_key, settings_key-or-None) ->
+        #     (config, EvalResult, strategy-or-None)
+        self._entries: dict[
+            tuple[str, str, Optional[str]],
+            tuple[Config, EvalResult, Optional[str]]] = {}
+        # wildcard view: last write per (benchmark, config_key), first-seen
+        # position preserved — the pre-settings-key lookup semantics
+        self._latest: dict[
+            tuple[str, str],
+            tuple[Config, EvalResult, Optional[str], Optional[str]]] = {}
         self.n_stale = 0   # records skipped on load (other hardware/version)
         if self.path.exists():
             self._load()
@@ -203,9 +233,12 @@ class TrialCache:
                         or rec.get("fingerprint") != self.fingerprint):
                     self.n_stale += 1
                     continue
-                key = (rec["benchmark"], config_key(rec["config"]))
-                self._entries[key] = (rec["config"],
-                                      _result_from_json(rec["result"]))
+                bench, ckey = rec["benchmark"], config_key(rec["config"])
+                skey = rec.get("settings_key")
+                entry = (rec["config"], _result_from_json(rec["result"]),
+                         rec.get("strategy"))
+                self._entries[(bench, ckey, skey)] = entry
+                self._latest[(bench, ckey)] = entry + (skey,)
 
     def __len__(self) -> int:
         with self._lock:
@@ -215,54 +248,125 @@ class TrialCache:
     def benchmarks(self) -> list[str]:
         """Benchmark names with at least one cached trial, sorted."""
         with self._lock:
-            return sorted({bench for bench, _ in self._entries})
+            return sorted({bench for bench, _ in self._latest})
 
     def items(self, benchmark: Optional[str] = None,
               ) -> list[tuple[str, Config, EvalResult]]:
-        """Snapshot of cached trials as (benchmark, config, result) tuples,
-        in insertion order, optionally restricted to one benchmark."""
+        """Snapshot of cached trials as (benchmark, config, result) tuples
+        — the latest record per config, in first-seen order, optionally
+        restricted to one benchmark."""
         with self._lock:
             return [(bench, cfg, res)
-                    for (bench, _), (cfg, res) in self._entries.items()
+                    for (bench, _), (cfg, res, *_meta)
+                    in self._latest.items()
                     if benchmark is None or bench == benchmark]
 
     def trials(self) -> list[CachedTrial]:
-        """This cache's entries as :class:`CachedTrial`s (all stamped with
-        the cache's own fingerprint — stale-fingerprint records were
-        dropped on load; use :func:`load_trials` to see every machine)."""
-        return [CachedTrial(benchmark=bench, fingerprint=self.fingerprint,
-                            config=cfg, result=res)
-                for bench, cfg, res in self.items()]
-
-    def get(self, benchmark: str, config: Config) -> Optional[EvalResult]:
+        """This cache's entries as :class:`CachedTrial`s — latest record
+        per config, all stamped with the cache's own fingerprint
+        (stale-fingerprint records were dropped on load; use
+        :func:`load_trials` to see every machine)."""
         with self._lock:
-            hit = self._entries.get((benchmark, config_key(config)))
+            return [CachedTrial(benchmark=bench, fingerprint=self.fingerprint,
+                                config=cfg, result=res, strategy=strat)
+                    for (bench, _), (cfg, res, strat, _skey)
+                    in self._latest.items()]
+
+    def get(self, benchmark: str, config: Config,
+            settings_key: Optional[str] = None) -> Optional[EvalResult]:
+        """Cached result for a config. With ``settings_key``, only a
+        record measured under those settings (or a legacy record with no
+        key) satisfies the read — a halving rung's truncated trial never
+        passes for a full-budget one. Without it, the latest record per
+        config wins (the pre-settings-key semantics)."""
+        ckey = config_key(config)
+        with self._lock:
+            if settings_key is not None:
+                hit = self._entries.get((benchmark, ckey, settings_key)) \
+                    or self._entries.get((benchmark, ckey, None))
+                return hit[1] if hit is not None else None
+            hit = self._latest.get((benchmark, ckey))
             return hit[1] if hit is not None else None
 
-    def put(self, benchmark: str, config: Config,
-            result: EvalResult) -> None:
+    def put(self, benchmark: str, config: Config, result: EvalResult,
+            strategy: Optional[str] = None,
+            settings_key: Optional[str] = None) -> None:
         rec = {"version": CACHE_VERSION, "fingerprint": self.fingerprint,
                "benchmark": benchmark, "config": config,
                "result": _result_to_json(result)}
+        if strategy is not None:
+            rec["strategy"] = strategy
+        if settings_key is not None:
+            rec["settings_key"] = settings_key
         line = json.dumps(rec, default=str)
+        ckey = config_key(config)
+        entry = (config, result, strategy)
         with self._lock:
-            self._entries[(benchmark, config_key(config))] = (config, result)
+            self._entries[(benchmark, ckey, settings_key)] = entry
+            self._latest[(benchmark, ckey)] = entry + (settings_key,)
             self.path.parent.mkdir(parents=True, exist_ok=True)
             with open(self.path, "a", encoding="utf-8") as f:
                 f.write(line + "\n")
 
     def best(self, benchmark: str, direction: Direction,
+             settings_key: Optional[str] = None,
              ) -> Optional[tuple[Config, float]]:
         """Best non-pruned cached (config, score) for warm-starting the
-        incumbent. Pruned trials carry truncated estimates and never seed."""
+        incumbent. Pruned trials carry truncated estimates and never seed,
+        and with ``settings_key`` neither do trials measured under other
+        settings (e.g. a halving rung's reduced budget) — legacy records
+        without a key still qualify."""
         with self._lock:
+            if settings_key is not None:
+                pool = [(cfg, res)
+                        for (bench, _, skey), (cfg, res, _strat)
+                        in self._entries.items()
+                        if bench == benchmark
+                        and skey in (None, settings_key)]
+            else:
+                pool = [(cfg, res)
+                        for (bench, _), (cfg, res, *_meta)
+                        in self._latest.items() if bench == benchmark]
             best: Optional[tuple[Config, float]] = None
-            for (bench, _), (cfg, res) in self._entries.items():
-                if bench != benchmark or res.pruned:
+            for cfg, res in pool:
+                if res.pruned:
                     continue
                 if best is None or direction.better(res.score, best[1]):
                     best = (cfg, res.score)
             return best
+
+    def suggest_seeds(self, benchmark: str,
+                      fingerprint: Optional[str] = None,
+                      direction: Direction = Direction.MAXIMIZE,
+                      limit: int = 3) -> list[Config]:
+        """Transfer-tuning warm-start seeds: the best unpruned cached
+        configurations of ``benchmark``, best first.
+
+        With ``fingerprint=None`` (or this cache's own) the in-memory
+        entries answer directly; another machine's fingerprint re-reads
+        the cache file, since :class:`TrialCache` drops foreign records on
+        load. Timings never transfer across hardware — but *configurations*
+        are still informative starting points, which is all a seed is. Feed
+        the result to ``Tuner.tune(seeds=...)`` (configs are projected into
+        the target space there).
+        """
+        if fingerprint is None or fingerprint == self.fingerprint:
+            with self._lock:
+                pool = [(cfg, res) for (bench, _), (cfg, res, *_meta)
+                        in self._latest.items()
+                        if bench == benchmark and not res.pruned]
+        else:
+            if not self.path.exists():
+                return []
+            dedup: dict[str, tuple[Config, EvalResult]] = {}
+            for t in iter_trials(self.path):
+                if t.benchmark == benchmark and t.fingerprint == fingerprint \
+                        and not t.result.pruned:
+                    dedup[t.key] = (t.config, t.result)
+            pool = list(dedup.values())
+        pool.sort(key=lambda cr: cr[1].score,
+                  reverse=(direction is Direction.MAXIMIZE))
+        return [cfg for cfg, _ in pool[:max(0, limit)]]
 
     def bound(self, benchmark: str) -> "BoundCache":
         return BoundCache(self, benchmark)
@@ -276,14 +380,27 @@ class BoundCache:
         self.cache = cache
         self.benchmark = benchmark
 
-    def get(self, config: Config) -> Optional[EvalResult]:
-        return self.cache.get(self.benchmark, config)
+    def get(self, config: Config,
+            settings_key: Optional[str] = None) -> Optional[EvalResult]:
+        return self.cache.get(self.benchmark, config,
+                              settings_key=settings_key)
 
-    def put(self, config: Config, result: EvalResult) -> None:
-        self.cache.put(self.benchmark, config, result)
+    def put(self, config: Config, result: EvalResult,
+            strategy: Optional[str] = None,
+            settings_key: Optional[str] = None) -> None:
+        self.cache.put(self.benchmark, config, result, strategy=strategy,
+                       settings_key=settings_key)
 
-    def best(self, direction: Direction) -> Optional[tuple[Config, float]]:
-        return self.cache.best(self.benchmark, direction)
+    def best(self, direction: Direction,
+             settings_key: Optional[str] = None,
+             ) -> Optional[tuple[Config, float]]:
+        return self.cache.best(self.benchmark, direction,
+                               settings_key=settings_key)
+
+    def suggest_seeds(self, direction: Direction = Direction.MAXIMIZE,
+                      limit: int = 3) -> list[Config]:
+        return self.cache.suggest_seeds(self.benchmark, direction=direction,
+                                        limit=limit)
 
 
 class TuningSession:
@@ -311,8 +428,12 @@ class TuningSession:
         self.cache = TrialCache(Path(cache_dir) / f"{name}.jsonl",
                                 fingerprint=fingerprint)
 
-    def run(self, backend=None, progress=None):
+    def run(self, backend=None, progress=None, seeds=()):
+        """Execute the wrapped tuner against the session cache. ``seeds``
+        are transfer-tuning warm-start configs (see
+        ``TrialCache.suggest_seeds``), forwarded to ``Tuner.tune``."""
         return self.tuner.tune(self.benchmark, progress=progress,
                                backend=backend,
                                cache=self.cache.bound(self.benchmark_name),
-                               warm_start=self.warm_start)
+                               warm_start=self.warm_start,
+                               seeds=seeds)

@@ -4,7 +4,7 @@ The paper's search loop is inherently serial: one configuration at a time,
 each pruned against the incumbent best found so far (stop condition 4).
 This module factors the *scheduling* of configuration evaluations out of
 :class:`~repro.core.tuner.Tuner` so the same search semantics run under
-three execution regimes:
+four execution regimes:
 
   * :class:`SerialBackend` — today's semantics, one evaluation at a time.
   * :class:`ThreadPoolBackend` — configurations evaluate concurrently;
@@ -13,38 +13,64 @@ three execution regimes:
     against the live global best rather than a stale snapshot. Real
     benchmarks block on device execution (``block_until_ready`` releases
     the GIL), so threads overlap genuinely on hardware.
+  * :class:`ProcessPoolBackend` — configurations evaluate in worker
+    *processes*, escaping the GIL for CPU-bound objectives. The evaluate
+    callable and the benchmark factory must be picklable; the incumbent is
+    frozen per batch (cross-process live sharing would serialize on IPC),
+    so batch boundaries are this backend's all-reduce rounds, exactly like
+    the simulated fleet.
   * :class:`SimulatedShardedBackend` — the fleet simulation previously
-    hard-wired into ``repro.distributed.tuner``: strided shards, one
-    synchronized round per shard index, incumbent all-reduced between
-    rounds, faithful per-worker wall-clock accounting
-    (parallel time = max over workers).
+    hard-wired into ``repro.distributed.tuner``: one synchronized round
+    per batch, incumbent all-reduced between rounds, faithful per-worker
+    wall-clock accounting (parallel time = max over workers).
 
-Backends receive an ``evaluate(config, incumbent)`` callable (built by the
-tuner; it owns the evaluator and the optional trial cache) where
-``incumbent`` may be a float, ``None``, or a zero-arg callable yielding the
-live best score.
+Since the strategy refactor, backends consume *batches* — the unit a
+:class:`~repro.core.strategy.SearchStrategy` proposes via ``ask()`` — not
+a flat configuration list. A :class:`Batch` carries its configurations
+plus an optional per-batch :class:`~repro.core.evaluator.EvaluationSettings`
+override (successive halving raises the iteration budget per rung this
+way). Batch boundaries are semantic: round-synchronized backends
+(simulated, process) freeze the incumbent per batch and all-reduce at the
+batch end, and the strategy's ``tell()`` is guaranteed to have seen every
+outcome of a batch before the next ``ask()``.
+
+Backends receive an ``evaluate(config, incumbent, settings)`` callable
+(built by the tuner; it owns the evaluator) where ``incumbent`` may be a
+float, ``None``, or a zero-arg callable yielding the live best score, and
+``settings`` is the batch override (``None`` — use the tuner's own). A
+flat ``Sequence[Config]`` is still accepted by :meth:`ExecutionBackend.run`
+and coerced to batches reproducing each backend's pre-strategy behaviour.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import pickle
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Optional, Sequence
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Callable, Iterable, Mapping, Optional, Sequence, Union
 
-from .evaluator import EvalResult, Incumbent
+from .evaluator import EvalResult, EvaluationSettings, Incumbent
 from .searchspace import Config
 from .stop_conditions import Direction
 
-__all__ = ["ExecutionBackend", "ExecutionStats", "IncumbentCell",
-           "SerialBackend", "SimulatedShardedBackend", "ThreadPoolBackend",
-           "TrialOutcome"]
+__all__ = ["Batch", "BatchStats", "ExecutionBackend", "ExecutionStats",
+           "IncumbentCell", "ProcessPoolBackend", "SerialBackend",
+           "SimulatedShardedBackend", "ThreadPoolBackend", "TrialOutcome"]
 
-# (config, incumbent) -> EvalResult; see evaluator.Incumbent for the
-# float-or-live-supplier contract
-EvaluateFn = Callable[[Config, Incumbent], EvalResult]
+# (config, incumbent, batch settings override) -> EvalResult; see
+# evaluator.Incumbent for the float-or-live-supplier contract
+EvaluateFn = Callable[[Config, Incumbent, Optional[EvaluationSettings]],
+                      EvalResult]
 ProgressFn = Callable[[Config, EvalResult], None]
+#: batch-end feedback, called once per outcome in proposal order on the
+#: scheduling thread (strategy tell + trial recording)
+ObserveFn = Callable[["TrialOutcome"], None]
+#: immediate persistence hook, called as soon as an outcome exists — from
+#: the worker thread on concurrent backends, so it must be thread-safe
+#: (TrialCache.put is); a killed run loses at most the trials in flight
+PersistFn = Callable[["TrialOutcome"], None]
 
 
 class IncumbentCell:
@@ -93,14 +119,41 @@ class IncumbentCell:
 
 
 @dataclasses.dataclass(frozen=True)
+class Batch:
+    """One strategy proposal: configurations to evaluate together.
+
+    ``settings`` overrides the tuner's evaluation settings for this batch
+    only (e.g. a successive-halving rung budget); ``None`` means the
+    tuner's own settings apply — and only then may the trial cache serve
+    hits, since cached results were measured under those settings.
+    """
+
+    configs: tuple[Config, ...]
+    settings: Optional[EvaluationSettings] = None
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+
+@dataclasses.dataclass(frozen=True)
 class TrialOutcome:
     """One scheduled evaluation as the backend saw it."""
 
-    index: int           # position in the search order
+    index: int           # position in the overall proposal order
     config: Config
     result: EvalResult
     worker: int = 0
     elapsed_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchStats:
+    """Per-batch scheduling accounting (one strategy round)."""
+
+    index: int
+    size: int
+    wall_s: float
+    n_pruned: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,45 +164,133 @@ class ExecutionStats:
     n_workers: int
     serial_time_s: float     # sum of per-trial wall clock
     parallel_time_s: float   # run wall clock (simulated: max over workers)
+    batches: tuple[BatchStats, ...] = ()
+
+
+BatchSource = Union[Iterable[Batch], Sequence[Config]]
 
 
 class ExecutionBackend:
-    """Schedules evaluations over an ordered configuration list."""
+    """Schedules evaluations over strategy-proposed batches.
+
+    Subclasses implement :meth:`_run_batch` (execute one batch, calling
+    ``observe`` for every outcome before returning — that ordering is what
+    guarantees a strategy's ``tell()`` runs before its next ``ask()``) and
+    may override the per-run context hooks for pools or per-worker
+    accounting. ``batch_hint`` is the batch size the backend schedules
+    best (its parallel width); strategies treat it as a suggestion.
+    """
 
     name: str = "base"
+    n_workers: int = 1
+    #: round width passed to ``SearchStrategy.ask``: the all-reduce batch
+    #: size for round-synchronized backends (simulated, process), ``None``
+    #: when the backend imposes no round structure (serial, thread) — the
+    #: strategy then proposes its full natural unit per batch
+    batch_hint: Optional[int] = None
+    #: chunk size used when a flat config list is passed to :meth:`run`
+    #: (``None`` — a single batch, the pre-strategy behaviour of the
+    #: serial/thread backends; round-synchronized backends use n_workers)
+    legacy_round: Optional[int] = None
+    clock: Callable[[], float] = staticmethod(time.perf_counter)
 
-    def run(self, configs: Sequence[Config], evaluate: EvaluateFn,
+    def run(self, batches: BatchSource, evaluate: EvaluateFn,
             cell: IncumbentCell, progress: Optional[ProgressFn] = None,
+            observe: Optional[ObserveFn] = None,
+            persist: Optional[PersistFn] = None,
             ) -> tuple[list[TrialOutcome], ExecutionStats]:
+        """Drain ``batches`` (an iterable of :class:`Batch`, typically a
+        generator pulling from a strategy, or a flat config list for
+        compatibility) and return every outcome plus scheduling stats."""
+        batches = self._as_batches(batches)
+        outcomes: list[TrialOutcome] = []
+        stats: list[BatchStats] = []
+        serial = 0.0
+        t0 = self.clock()
+        ctx = self._start_run()
+        try:
+            for b, batch in enumerate(batches):
+                if not batch.configs:
+                    continue
+                tb = self.clock()
+                got = self._run_batch(ctx, batch, evaluate, cell, progress,
+                                      observe, persist,
+                                      base_index=len(outcomes))
+                outcomes.extend(got)
+                serial += sum(o.elapsed_s for o in got)
+                stats.append(BatchStats(
+                    index=b, size=len(got), wall_s=self.clock() - tb,
+                    n_pruned=sum(1 for o in got if o.result.pruned)))
+        finally:
+            self._end_run(ctx)
+        wall = self.clock() - t0
+        return outcomes, ExecutionStats(
+            backend=self.name, n_workers=self.n_workers,
+            serial_time_s=serial,
+            parallel_time_s=self._parallel_time(ctx, wall),
+            batches=tuple(stats))
+
+    # -- per-run hooks --------------------------------------------------------
+    def _start_run(self):
+        return None
+
+    def _end_run(self, ctx) -> None:
+        pass
+
+    def _parallel_time(self, ctx, wall: float) -> float:
+        return wall
+
+    def _run_batch(self, ctx, batch: Batch, evaluate: EvaluateFn,
+                   cell: IncumbentCell, progress: Optional[ProgressFn],
+                   observe: Optional[ObserveFn],
+                   persist: Optional[PersistFn],
+                   base_index: int) -> list[TrialOutcome]:
         raise NotImplementedError
+
+    # -- compatibility --------------------------------------------------------
+    def _as_batches(self, batches: BatchSource) -> Iterable[Batch]:
+        """Coerce a flat ``Sequence[Config]`` into this backend's
+        pre-strategy batching (one batch, or ``legacy_round``-sized rounds
+        for the round-synchronized backends)."""
+        if isinstance(batches, Sequence) and not isinstance(batches,
+                                                            (str, bytes)):
+            items = list(batches)
+            if items and all(isinstance(c, Mapping) for c in items):
+                size = self.legacy_round or len(items)
+                return [Batch(tuple(items[i:i + size]))
+                        for i in range(0, len(items), size)]
+        return batches
 
 
 class SerialBackend(ExecutionBackend):
-    """One evaluation at a time, in search order (the paper's loop)."""
+    """One evaluation at a time, in proposal order (the paper's loop)."""
 
     name = "serial"
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
 
-    def run(self, configs, evaluate, cell, progress=None):
+    def _run_batch(self, ctx, batch, evaluate, cell, progress, observe,
+                   persist, base_index):
         outcomes: list[TrialOutcome] = []
-        t0 = self.clock()
-        serial = 0.0
-        for i, cfg in enumerate(configs):
+        for j, cfg in enumerate(batch.configs):
             t1 = self.clock()
-            res = evaluate(cfg, cell.get)
+            res = evaluate(cfg, cell.get, batch.settings)
             dt = self.clock() - t1
-            serial += dt
             if not res.pruned:
                 cell.offer(cfg, res.score)
-            outcomes.append(TrialOutcome(index=i, config=cfg, result=res,
-                                         elapsed_s=dt))
+            out = TrialOutcome(index=base_index + j, config=cfg, result=res,
+                               elapsed_s=dt)
+            outcomes.append(out)
+            # persist + observe before progress, so a progress callback
+            # that aborts the run never loses the trial
+            if persist is not None:
+                persist(out)
+            if observe is not None:
+                observe(out)
             if progress is not None:
                 progress(cfg, res)
-        return outcomes, ExecutionStats(
-            backend=self.name, n_workers=1, serial_time_s=serial,
-            parallel_time_s=self.clock() - t0)
+        return outcomes
 
 
 class ThreadPoolBackend(ExecutionBackend):
@@ -157,7 +298,10 @@ class ThreadPoolBackend(ExecutionBackend):
 
     Each in-flight evaluation re-reads the cell before every sample, so a
     best score found on one thread immediately tightens stop-condition-4
-    pruning on all others.
+    pruning on all others. ``persist`` and ``progress`` fire live from
+    the worker thread as each trial finishes (so a killed run keeps every
+    completed trial on disk); ``observe`` runs on the scheduling thread
+    at the batch end, in proposal order.
     """
 
     name = "thread"
@@ -169,29 +313,38 @@ class ThreadPoolBackend(ExecutionBackend):
         self.n_workers = n_workers
         self.clock = clock
 
-    def run(self, configs, evaluate, cell, progress=None):
-        progress_lock = threading.Lock()
+    def _start_run(self):
+        return {"pool": ThreadPoolExecutor(max_workers=self.n_workers),
+                "progress_lock": threading.Lock()}
 
-        def work(i: int, cfg: Config) -> TrialOutcome:
+    def _end_run(self, ctx) -> None:
+        ctx["pool"].shutdown(wait=True)
+
+    def _run_batch(self, ctx, batch, evaluate, cell, progress, observe,
+                   persist, base_index):
+        lock = ctx["progress_lock"]
+
+        def work(j: int, cfg: Config) -> TrialOutcome:
             t1 = self.clock()
-            res = evaluate(cfg, cell.get)
+            res = evaluate(cfg, cell.get, batch.settings)
             dt = self.clock() - t1
             if not res.pruned:
                 cell.offer(cfg, res.score)
+            out = TrialOutcome(index=base_index + j, config=cfg, result=res,
+                               elapsed_s=dt)
+            if persist is not None:
+                persist(out)          # thread-safe; survives a killed run
             if progress is not None:
-                with progress_lock:
+                with lock:
                     progress(cfg, res)
-            return TrialOutcome(index=i, config=cfg, result=res,
-                                elapsed_s=dt)
+            return out
 
-        t0 = self.clock()
-        with ThreadPoolExecutor(max_workers=self.n_workers) as pool:
-            outcomes = list(pool.map(work, range(len(configs)), configs))
-        wall = self.clock() - t0
-        return outcomes, ExecutionStats(
-            backend=self.name, n_workers=self.n_workers,
-            serial_time_s=sum(o.elapsed_s for o in outcomes),
-            parallel_time_s=wall)
+        outcomes = list(ctx["pool"].map(work, range(len(batch.configs)),
+                                        batch.configs))
+        if observe is not None:
+            for out in outcomes:
+                observe(out)
+        return outcomes
 
 
 def shard_configs(configs: Sequence[Config],
@@ -203,14 +356,16 @@ def shard_configs(configs: Sequence[Config],
 
 
 class SimulatedShardedBackend(ExecutionBackend):
-    """Simulated fleet: strided shards, per-round incumbent all-reduce.
+    """Simulated fleet: one synchronized round per batch.
 
     Workers run lockstep rounds; within a round every worker prunes against
     the incumbent agreed at the end of the *previous* round (a scalar
     ``lax.pmax``/``pmin`` on a real mesh). Evaluations execute serially
     here but per-worker wall clock is accounted faithfully, so
-    ``parallel_time_s`` is the simulated fleet wall clock. This reproduces
-    the paper-extension speedup tables exactly as before the refactor.
+    ``parallel_time_s`` is the simulated fleet wall clock. Batch boundaries
+    are the all-reduce rounds: a flat config list is coerced to
+    ``n_workers``-sized rounds, reproducing the pre-strategy strided
+    schedule exactly.
     """
 
     name = "simulated"
@@ -220,34 +375,140 @@ class SimulatedShardedBackend(ExecutionBackend):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.n_workers = n_workers
+        self.batch_hint = n_workers
+        self.legacy_round = n_workers
         self.clock = clock
 
-    def run(self, configs, evaluate, cell, progress=None):
-        configs = list(configs)
-        shards = shard_configs(list(enumerate(configs)), self.n_workers)
-        worker_time = [0.0] * self.n_workers
+    def _start_run(self):
+        return {"worker_time": [0.0] * self.n_workers}
+
+    def _parallel_time(self, ctx, wall: float) -> float:
+        times = ctx["worker_time"]
+        return max(times) if any(t > 0.0 for t in times) else 0.0
+
+    def _run_batch(self, ctx, batch, evaluate, cell, progress, observe,
+                   persist, base_index):
+        frozen = cell.get()  # previous round's all-reduced incumbent
         outcomes: list[TrialOutcome] = []
-        rounds = max((len(s) for s in shards), default=0)
-        for r in range(rounds):
-            frozen = cell.get()  # previous round's all-reduced incumbent
-            round_results: list[tuple[Config, EvalResult]] = []
-            for w, shard in enumerate(shards):
-                if r >= len(shard):
-                    continue
-                i, cfg = shard[r]
-                t1 = self.clock()
-                res = evaluate(cfg, frozen)
-                dt = self.clock() - t1
-                worker_time[w] += dt
-                outcomes.append(TrialOutcome(index=i, config=cfg, result=res,
-                                             worker=w, elapsed_s=dt))
-                round_results.append((cfg, res))
-                if progress is not None:
-                    progress(cfg, res)
-            for cfg, res in round_results:
-                if not res.pruned:
-                    cell.offer(cfg, res.score)
-        return outcomes, ExecutionStats(
-            backend=self.name, n_workers=self.n_workers,
-            serial_time_s=sum(worker_time),
-            parallel_time_s=max(worker_time) if worker_time else 0.0)
+        for j, cfg in enumerate(batch.configs):
+            w = j % self.n_workers
+            t1 = self.clock()
+            res = evaluate(cfg, frozen, batch.settings)
+            dt = self.clock() - t1
+            ctx["worker_time"][w] += dt
+            out = TrialOutcome(index=base_index + j, config=cfg,
+                               result=res, worker=w, elapsed_s=dt)
+            outcomes.append(out)
+            if persist is not None:
+                persist(out)
+            if progress is not None:
+                progress(cfg, res)
+        for out in outcomes:            # the round's all-reduce
+            if not out.result.pruned:
+                cell.offer(out.config, out.result.score)
+        if observe is not None:
+            for out in outcomes:
+                observe(out)
+        return outcomes
+
+
+def _process_trial(evaluate: EvaluateFn, cfg: Config,
+                   incumbent: Optional[float],
+                   settings: Optional[EvaluationSettings],
+                   ) -> tuple[EvalResult, float]:
+    """Worker-side trial: runs in the pool process; the elapsed time is
+    measured inside the worker so IPC overhead never pollutes trial time."""
+    t1 = time.perf_counter()
+    res = evaluate(cfg, incumbent, settings)
+    return res, time.perf_counter() - t1
+
+
+class ProcessPoolBackend(ExecutionBackend):
+    """Evaluations in worker processes — escapes the GIL for CPU-bound
+    objectives (the ROADMAP's process-pool backend).
+
+    The evaluate callable (and therefore the benchmark factory and
+    settings) must be picklable; module-level functions qualify, lambdas
+    and closures do not — :meth:`run` raises a ``TypeError`` naming the
+    offender up front rather than failing inside the pool. The incumbent
+    is frozen per batch and all-reduced at the batch end (live
+    cross-process sharing would serialize every sample on IPC), so this
+    backend has the simulated fleet's round semantics with real
+    parallelism.
+
+    Workers start via the ``spawn`` method by default: JAX is
+    multithreaded, so forking a process that has already initialized the
+    jax backend deadlocks. Spawned workers re-import the evaluate task's
+    modules (the parent's ``sys.path`` is inherited), costing ~2 s of
+    startup per pool — amortized over a search, and the only start method
+    that is safe after jax initialization. Pass ``start_method="fork"``
+    only for jax-free objectives where startup dominates.
+    """
+
+    name = "process"
+
+    def __init__(self, n_workers: int = 4,
+                 clock: Callable[[], float] = time.perf_counter,
+                 start_method: str = "spawn"):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        self.n_workers = n_workers
+        self.batch_hint = n_workers
+        self.legacy_round = n_workers
+        self.clock = clock
+        self.start_method = start_method
+
+    def _make_pool(self) -> ProcessPoolExecutor:
+        import multiprocessing
+        try:
+            mp_ctx = multiprocessing.get_context(self.start_method)
+        except ValueError:                       # platform without it
+            mp_ctx = multiprocessing.get_context()
+        return ProcessPoolExecutor(max_workers=self.n_workers,
+                                   mp_context=mp_ctx)
+
+    def _start_run(self):
+        return {"pool": None, "checked": False}
+
+    def _end_run(self, ctx) -> None:
+        if ctx["pool"] is not None:
+            ctx["pool"].shutdown(wait=True)
+
+    def _check_picklable(self, evaluate: EvaluateFn,
+                         settings: Optional[EvaluationSettings]) -> None:
+        try:
+            pickle.dumps((evaluate, settings))
+        except Exception as e:
+            raise TypeError(
+                "ProcessPoolBackend requires a picklable evaluate task: "
+                "benchmark factories must be module-level callables, not "
+                f"lambdas or closures ({e})") from e
+
+    def _run_batch(self, ctx, batch, evaluate, cell, progress, observe,
+                   persist, base_index):
+        if not ctx["checked"]:
+            self._check_picklable(evaluate, batch.settings)
+            ctx["checked"] = True
+        if ctx["pool"] is None:
+            ctx["pool"] = self._make_pool()
+        frozen = cell.get()  # previous batch's all-reduced incumbent
+        futures = [ctx["pool"].submit(_process_trial, evaluate, cfg, frozen,
+                                      batch.settings)
+                   for cfg in batch.configs]
+        outcomes: list[TrialOutcome] = []
+        for j, (cfg, fut) in enumerate(zip(batch.configs, futures)):
+            res, dt = fut.result()
+            out = TrialOutcome(index=base_index + j, config=cfg, result=res,
+                               worker=j % self.n_workers, elapsed_s=dt)
+            outcomes.append(out)
+            if persist is not None:     # parent-side, as futures land
+                persist(out)
+        for out in outcomes:            # the batch's all-reduce
+            if not out.result.pruned:
+                cell.offer(out.config, out.result.score)
+        for out in outcomes:
+            if observe is not None:
+                observe(out)
+            if progress is not None:
+                progress(out.config, out.result)
+        return outcomes

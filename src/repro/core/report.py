@@ -93,6 +93,12 @@ class IncumbentTrial:
     def total_samples(self) -> int:
         return self.trial.result.total_samples
 
+    @property
+    def strategy(self) -> Optional[str]:
+        """Search strategy that produced this incumbent (``None`` for
+        records predating the strategy layer)."""
+        return self.trial.strategy
+
     def interval(self, confidence: float = 0.99) -> Interval:
         """CI of the mean over the pooled sample stream (same units as
         ``score``)."""
@@ -190,8 +196,9 @@ def trials_from_result(result, benchmark: str,
     """Adapt an in-memory :class:`~repro.core.tuner.TuningResult` to the
     reporting layer's input, so fresh runs can render the same dashboards
     as persisted caches."""
+    strategy = getattr(result, "strategy", None)
     return [CachedTrial(benchmark=benchmark, fingerprint=fingerprint,
-                        config=t.config, result=t.result)
+                        config=t.config, result=t.result, strategy=strategy)
             for t in result.trials]
 
 
@@ -318,25 +325,38 @@ def render_markdown(reports: Sequence[FingerprintReport],
                   else ("(score)", "(score)"))
         lines.append(f"## Fingerprint `{r.fingerprint}`")
         lines.append("")
+        # annotate which search strategy produced each incumbent, when any
+        # trial recorded one (records predating the strategy layer do not)
+        annotate = (r.dgemm.strategy is not None
+                    or any(inc.strategy is not None
+                           for _, inc in r.bandwidths))
+
+        def _via(inc: IncumbentTrial) -> list[str]:
+            if not annotate:
+                return []
+            return [inc.strategy if inc.strategy is not None else "—"]
+
         rows = []
         iv = r.dgemm.interval(r.confidence)
         rows.append(["peak compute F_p (dgemm)",
                      f"{_num(r.dgemm.score)} {gf}", _margin(iv),
                      f"`{config_key(r.dgemm.config)}`",
-                     str(r.dgemm.total_samples)])
+                     str(r.dgemm.total_samples)] + _via(r.dgemm))
         for name, inc in r.bandwidths:
             iv = inc.interval(r.confidence)
             rows.append([f"bandwidth B_a {name} (triad)",
                          f"{_num(inc.score)} {gb}", _margin(iv),
                          f"`{config_key(inc.config)}`",
-                         str(inc.total_samples)])
+                         str(inc.total_samples)] + _via(inc))
         for name, _ in r.bandwidths:
             ridge = ridge_point(r.peak_flops,
                                 r.model.machine.mem_bandwidths[name])
             rows.append([f"ridge point I* {name}",
-                         f"{_num(ridge)} FLOP/B", "", "", ""])
+                         f"{_num(ridge)} FLOP/B", "", "", ""]
+                        + ([""] if annotate else []))
         lines += _md_table(["quantity", "value", f"{conf_pct} CI",
-                            "incumbent config", "samples"], rows)
+                            "incumbent config", "samples"]
+                           + (["strategy"] if annotate else []), rows)
         lines += ["", "```text", r.model.dashboard(marks=r.marks), "```", ""]
         lines.append("### Model vs measured (% of roof)")
         lines.append("")

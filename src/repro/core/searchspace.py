@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import numbers
 import random as _random
 from typing import Any, Callable, Iterator, Mapping, Optional, Sequence
 
@@ -75,6 +76,7 @@ class SearchSpace:
             raise ValueError("duplicate parameter names")
         self.params = tuple(params)
         self.constraints = tuple(constraints)
+        self._cardinality: Optional[int] = None   # filtered-count cache
 
     # -- construction helpers -------------------------------------------------
     def constrain(self, *constraints: Constraint) -> "SearchSpace":
@@ -104,11 +106,53 @@ class SearchSpace:
     @property
     def cardinality(self) -> int:
         """|S| after constraint filtering. Enumerative — the paper's premise
-        is that autotuning-benchmark spaces are deliberately low-cardinality."""
-        return sum(1 for _ in self.configs())
+        is that autotuning-benchmark spaces are deliberately low-cardinality
+        — but computed once: params/constraints are immutable, and reports
+        read this per render."""
+        if self._cardinality is None:
+            self._cardinality = sum(1 for _ in self.configs())
+        return self._cardinality
 
     def _satisfies(self, cfg: Config) -> bool:
         return all(c(cfg) for c in self.constraints)
+
+    def satisfies(self, cfg: Config) -> bool:
+        """True iff ``cfg`` passes every constraint predicate (domain
+        membership is *not* checked; see ``__contains__`` for both)."""
+        return self._satisfies(cfg)
+
+    def __contains__(self, cfg: object) -> bool:
+        """True iff ``cfg`` assigns every parameter a value from its domain
+        and satisfies all constraints."""
+        if not isinstance(cfg, Mapping):
+            return False
+        if set(cfg) != {p.name for p in self.params}:
+            return False
+        if any(cfg[p.name] not in p.values for p in self.params):
+            return False
+        return self._satisfies(dict(cfg))
+
+    def project(self, cfg: Mapping) -> Optional[Config]:
+        """Nearest in-space configuration — the transfer-tuning seed
+        projection. Parameters present in ``cfg`` keep their value when it
+        is in the domain, snap to the numerically nearest domain value
+        otherwise; missing or non-numeric mismatches fall back to the
+        domain's first value. Returns ``None`` when the projection
+        violates a constraint (the seed is unusable here)."""
+        out: Config = {}
+        for p in self.params:
+            v = cfg.get(p.name)
+            if v in p.values:
+                out[p.name] = v
+                continue
+            numeric = (isinstance(v, numbers.Real)
+                       and not isinstance(v, bool)
+                       and all(isinstance(d, numbers.Real)
+                               and not isinstance(d, bool)
+                               for d in p.values))
+            out[p.name] = min(p.values, key=lambda d: abs(d - v)) \
+                if numeric else p.values[0]
+        return out if self._satisfies(out) else None
 
     def configs(self) -> Iterator[Config]:
         """Canonical (row-major) enumeration order."""

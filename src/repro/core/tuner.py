@@ -1,28 +1,33 @@
-"""The autotuner: exhaustive search + CI-pruned evaluation (paper Fig. 2).
+"""The autotuner engine: strategy-proposed, CI-pruned evaluation (paper
+Fig. 2, generalized).
 
-For every configuration in the (ordered) search space the tuner runs the
-two-level :class:`~repro.core.evaluator.Evaluator`, passing the incumbent
-best score so that stop condition 4 can prune doomed configurations early.
-The paper's experiments (Tables VIII-XI) are exactly runs of this object
-under different :class:`EvaluationSettings` flags and search orders.
+A :class:`~repro.core.strategy.SearchStrategy` proposes configuration
+batches (``ask``), an :class:`~repro.core.executor.ExecutionBackend`
+schedules their evaluation through the two-level
+:class:`~repro.core.evaluator.Evaluator`, and every outcome is fed back
+(``tell``) before the next proposal — with the incumbent best shared
+through a lock-protected cell so stop condition 4 prunes doomed
+configurations against the live (or round-frozen) global best. The
+paper's experiments (Tables VIII-XI) are exactly runs of this engine
+under the exhaustive strategy with different
+:class:`EvaluationSettings` flags and search orders.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
-from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
+from .evaluator import (EvalResult, EvaluationSettings, Evaluator, Incumbent,
                         InvocationFactory)
-from .executor import (ExecutionBackend, ExecutionStats, IncumbentCell,
-                       SerialBackend)
+from .executor import (Batch, BatchStats, ExecutionBackend, IncumbentCell,
+                       SerialBackend, TrialOutcome)
 from .searchspace import Config, SearchSpace
-from .stop_conditions import Direction
+from .strategy import ExhaustiveStrategy, SearchStrategy, SuccessiveHalvingStrategy
 
-__all__ = ["BenchmarkFactory", "TrialRecord", "Tuner", "TuningResult",
-           "compare_techniques", "standard_techniques",
+__all__ = ["BenchmarkFactory", "EvaluateTask", "TrialRecord", "Tuner",
+           "TuningResult", "compare_techniques", "standard_techniques",
            "tune_successive_halving"]
 
 # A benchmark binds a configuration to a per-invocation sampler factory.
@@ -35,6 +40,26 @@ class TrialRecord:
     result: EvalResult
     cached: bool = False      # served from a TrialCache, not re-evaluated
     worker: int = 0           # backend worker that ran it
+
+
+@dataclasses.dataclass
+class EvaluateTask:
+    """The engine's evaluation callable, shipped to backends.
+
+    A plain dataclass (not a closure) so :class:`ProcessPoolBackend` can
+    pickle it into worker processes — which also requires ``benchmark`` to
+    be a module-level callable. The optional per-call ``settings`` is a
+    strategy's batch override (e.g. a successive-halving rung budget).
+    """
+
+    settings: EvaluationSettings
+    benchmark: BenchmarkFactory
+    clock: Callable[[], float] = time.perf_counter
+
+    def __call__(self, config: Config, incumbent: Incumbent,
+                 settings: Optional[EvaluationSettings] = None) -> EvalResult:
+        evaluator = Evaluator(settings or self.settings, clock=self.clock)
+        return evaluator.evaluate(self.benchmark(config), incumbent=incumbent)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +81,10 @@ class TuningResult:
     # incumbent trajectory: every accepted (config, score) in acceptance
     # order; entry 0 is the warm-start seed when a cache seeded the cell
     improvements: tuple[tuple[Optional[Config], float], ...] = ()
+    # strategy accounting
+    strategy: str = "exhaustive"   # SearchStrategy.name that drove the run
+    batches: tuple[BatchStats, ...] = ()   # one entry per strategy round
+    n_seeded: int = 0              # transfer seeds injected into the search
 
     def summary_row(self) -> dict:
         return {
@@ -70,21 +99,37 @@ class TuningResult:
 
 
 class Tuner:
-    """Exhaustive/reversed/random-order autotuner with incumbent pruning."""
+    """Strategy-driven autotuner with incumbent pruning.
+
+    ``strategy`` is any :class:`~repro.core.strategy.SearchStrategy`;
+    the default is the paper's exhaustive visit. ``order``/``seed`` are
+    kept as a deprecated alias for
+    ``strategy=ExhaustiveStrategy(order, seed)`` — passing both ``order``
+    and ``strategy`` is an error.
+    """
 
     def __init__(self, space: SearchSpace, settings: EvaluationSettings,
-                 order: str = "exhaustive", seed: Optional[int] = None,
+                 strategy: Optional[SearchStrategy] = None,
+                 order: Optional[str] = None, seed: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter):
+        if strategy is not None and order is not None:
+            raise ValueError("pass either strategy= or the deprecated "
+                             "order= alias, not both")
+        if strategy is None:
+            strategy = ExhaustiveStrategy(order=order or "exhaustive",
+                                          seed=seed)
         self.space = space
         self.settings = settings
-        self.order = order
+        self.strategy = strategy
+        self.order = getattr(strategy, "order", strategy.order_label)
         self.seed = seed
         self.clock = clock
 
     def tune(self, benchmark: BenchmarkFactory,
              progress: Optional[Callable[[Config, EvalResult], None]] = None,
              backend: Optional[ExecutionBackend] = None,
-             cache=None, warm_start: bool = False) -> TuningResult:
+             cache=None, warm_start: bool = False,
+             seeds: Sequence[Config] = ()) -> TuningResult:
         """Search the space for the best configuration.
 
         ``backend`` schedules the evaluations (default
@@ -92,41 +137,86 @@ class Tuner:
         ``cache`` is a :class:`~repro.core.cache.BoundCache` — configs
         already in it are served without re-evaluation and fresh results
         are appended; ``warm_start`` additionally seeds the incumbent from
-        the best cached trial so pruning bites from trial 1.
+        the best cached trial so pruning bites from trial 1. ``seeds`` are
+        transfer-tuning warm-start configurations (e.g. a related
+        benchmark's cached incumbents from ``TrialCache.suggest_seeds``);
+        they are projected into the space and handed to the strategy,
+        which evaluates them first.
         """
+        from .cache import settings_key
+
         if backend is None:
             backend = SerialBackend(clock=self.clock)
-        evaluator = Evaluator(self.settings, clock=self.clock)
+        strategy = self.strategy
         direction = self.settings.direction
+        session_key = settings_key(self.settings)
         cell = IncumbentCell(direction)
         if cache is not None and warm_start:
-            seed = cache.best(direction)
-            if seed is not None:
-                cell.offer(seed[0], seed[1])
-        hits: set[int] = set()
-        hits_lock = threading.Lock()
+            # settings parity: never seed the incumbent from a trial
+            # measured under other settings (e.g. a halving rung budget)
+            best = cache.best(direction, settings_key=session_key)
+            if best is not None:
+                cell.offer(best[0], best[1])
+        projected = self._project_seeds(seeds)
+        strategy.reset(self.space, self.settings, seeds=projected)
+        evaluate = EvaluateTask(self.settings, benchmark, clock=self.clock)
+        hint = getattr(backend, "batch_hint", None)
+        records: list[TrialRecord] = []
+        # effective settings key of the batch currently executing; observe
+        # runs between generator resumes, so this is stable per batch
+        current_key = {"value": session_key}
 
-        def evaluate(cfg: Config, incumbent) -> EvalResult:
+        def batches():
+            while True:
+                asked = strategy.ask(hint)
+                if asked is None or not asked.configs:
+                    return
+                fresh: list[Config] = []
+                for cfg in asked.configs:
+                    # cache hits are only served for batches without a
+                    # settings override AND records measured under the
+                    # tuner's own settings — a rung-truncated trial must
+                    # never pass for a full-budget one
+                    hit = cache.get(cfg, settings_key=session_key) \
+                        if cache is not None and asked.settings is None \
+                        else None
+                    if hit is not None:
+                        if not hit.pruned:
+                            cell.offer(cfg, hit.score)
+                        strategy.tell(cfg, hit)
+                        records.append(TrialRecord(config=cfg, result=hit,
+                                                   cached=True))
+                        if progress is not None:
+                            progress(cfg, hit)
+                    else:
+                        fresh.append(cfg)
+                if fresh:
+                    current_key["value"] = session_key \
+                        if asked.settings is None \
+                        else settings_key(asked.settings)
+                    yield Batch(tuple(fresh), asked.settings)
+
+        def persist(outcome: TrialOutcome) -> None:
+            # called by the backend as soon as the trial finishes — from
+            # the worker thread on concurrent backends (TrialCache.put is
+            # thread-safe) — so a killed run keeps every completed trial
             if cache is not None:
-                hit = cache.get(cfg)
-                if hit is not None:
-                    with hits_lock:
-                        hits.add(id(cfg))
-                    return hit
-            res = evaluator.evaluate(benchmark(cfg), incumbent=incumbent)
-            if cache is not None:
-                cache.put(cfg, res)
-            return res
+                cache.put(outcome.config, outcome.result,
+                          strategy=strategy.name,
+                          settings_key=current_key["value"])
+
+        def observe(outcome: TrialOutcome) -> None:
+            strategy.tell(outcome.config, outcome.result)
+            records.append(TrialRecord(config=outcome.config,
+                                       result=outcome.result,
+                                       worker=outcome.worker))
 
         t0 = self.clock()
-        configs = self.space.ordered(self.order, seed=self.seed)
-        outcomes, stats = backend.run(configs, evaluate, cell,
-                                      progress=progress)
+        _, stats = backend.run(batches(), evaluate, cell,
+                               progress=progress, observe=observe,
+                               persist=persist)
         best_cfg, best_score = cell.snapshot()
-        trials = tuple(
-            TrialRecord(config=o.config, result=o.result,
-                        cached=id(o.config) in hits, worker=o.worker)
-            for o in outcomes)
+        trials = tuple(records)
         return TuningResult(
             best_config=best_cfg,
             best_score=best_score,
@@ -135,30 +225,61 @@ class Tuner:
             total_samples=sum(t.result.total_samples for t in trials),
             n_pruned=sum(1 for t in trials if t.result.pruned),
             settings_label=self.settings.label(),
-            order=self.order,
+            order=strategy.order_label,
             backend=stats.backend,
             n_workers=stats.n_workers,
             serial_time_s=stats.serial_time_s,
             parallel_time_s=stats.parallel_time_s,
             n_cached=sum(1 for t in trials if t.cached),
             improvements=cell.history(),
+            strategy=strategy.name,
+            batches=stats.batches,
+            n_seeded=len(projected),
         )
+
+    def _project_seeds(self, seeds: Sequence[Config]) -> tuple[Config, ...]:
+        """Map transfer seeds into this space (nearest in-space config),
+        dropping duplicates and constraint-violating projections."""
+        from .cache import config_key
+        out: list[Config] = []
+        seen: set[str] = set()
+        for cfg in seeds:
+            proj = self.space.project(cfg)
+            if proj is None:
+                continue
+            key = config_key(proj)
+            if key not in seen:
+                seen.add(key)
+                out.append(proj)
+        return tuple(out)
 
 
 def compare_techniques(space: SearchSpace, benchmark: BenchmarkFactory,
                        base: EvaluationSettings,
                        techniques: Optional[dict[str, tuple[EvaluationSettings, str]]] = None,
+                       backend: Optional[ExecutionBackend] = None,
+                       cache=None, warm_start: bool = False,
+                       cache_prefix: str = "technique",
                        ) -> dict[str, TuningResult]:
     """Run the paper's technique grid (Default / C / C+I / C+I+O, +-R) on one
     benchmark and return the per-technique :class:`TuningResult`s.
 
-    This is the engine behind the Tables VIII-XI reproduction.
+    This is the engine behind the Tables VIII-XI reproduction. ``backend``
+    schedules every technique's evaluations (so the grid can run on the
+    thread/process pools); ``cache`` is an *unbound*
+    :class:`~repro.core.cache.TrialCache` — each technique gets its own
+    benchmark namespace (``<cache_prefix>:<label>``) so the grid is
+    resumable without cross-technique contamination, and ``warm_start``
+    seeds each technique's incumbent from its own cached best.
     """
     if techniques is None:
         techniques = standard_techniques(base)
     out: dict[str, TuningResult] = {}
     for label, (settings, order) in techniques.items():
-        out[label] = Tuner(space, settings, order=order).tune(benchmark)
+        bound = cache.bound(f"{cache_prefix}:{label}") \
+            if cache is not None else None
+        out[label] = Tuner(space, settings, order=order).tune(
+            benchmark, backend=backend, cache=bound, warm_start=warm_start)
     return out
 
 
@@ -170,70 +291,17 @@ def tune_successive_halving(space: SearchSpace, benchmark: BenchmarkFactory,
     """Successive halving with CI-informed promotion (beyond-paper,
     DESIGN.md §8.3).
 
-    Rung r evaluates the survivors with an iteration budget that grows by
-    ``eta`` per rung; only the top 1/eta (by CI-aware comparison: a config
-    survives if its CI upper bound reaches the cutoff score) advance. The
-    same stop conditions apply inside each rung, so condition 4 still
-    prunes doomed configs early within a rung.
+    Compatibility wrapper: the loop now lives in
+    :class:`~repro.core.strategy.SuccessiveHalvingStrategy`, which runs
+    through the same engine as every other strategy — prefer
+    ``Tuner(space, base, strategy=SuccessiveHalvingStrategy(...))``, which
+    adds backend/cache/warm-start support this wrapper predates.
     """
-    from .confidence import ci_mean
-    from .welford import WelfordState
-
-    direction = base.direction
-    configs = space.ordered("exhaustive")
-    trials: list[TrialRecord] = []
-    t0 = clock()
-    total_samples = 0
-    budget = min_iterations
-    rung_settings = dataclasses.replace(
-        base, max_invocations=1, max_iterations=budget)
-    best_cfg: Optional[Config] = None
-    best_score: Optional[float] = None
-    survivors = configs
-    while survivors:
-        evaluator = Evaluator(rung_settings, clock=clock)
-        scored = []
-        for cfg in survivors:
-            res = evaluator.evaluate(benchmark(cfg), incumbent=best_score)
-            trials.append(TrialRecord(config=cfg, result=res))
-            total_samples += res.total_samples
-            if not res.pruned:
-                scored.append((cfg, res))
-                if best_score is None or direction.better(res.score,
-                                                          best_score):
-                    best_score, best_cfg = res.score, cfg
-        if len(scored) <= 1:
-            break
-        scored.sort(key=lambda cr: cr[1].score,
-                    reverse=(direction is Direction.MAXIMIZE))
-        keep = max(1, len(scored) // eta)
-        cutoff = scored[keep - 1][1].score
-        kept = []
-        for cfg, res in scored:
-            # CI-aware promotion: survive if the CI bound facing the cutoff
-            # still reaches it (the paper's Listing-1 logic as a promoter)
-            state = WelfordState(count=float(res.total_samples),
-                                 mean=res.score,
-                                 m2=sum(i.m2 for i in res.invocations))
-            interval = ci_mean(state, base.confidence)
-            bound = interval.hi if direction is Direction.MAXIMIZE \
-                else interval.lo
-            if direction.better(bound, cutoff) or bound == cutoff or \
-                    res.score == cutoff or direction.better(res.score,
-                                                            cutoff):
-                kept.append(cfg)
-        survivors = kept[:max(1, len(scored) // eta)] \
-            if len(kept) > len(scored) // eta else kept
-        if len(survivors) == 1:
-            break
-        budget *= eta
-        rung_settings = dataclasses.replace(rung_settings,
-                                            max_iterations=budget)
-    return TuningResult(
-        best_config=best_cfg, best_score=best_score, trials=tuple(trials),
-        total_time_s=clock() - t0, total_samples=total_samples,
-        n_pruned=sum(1 for t in trials if t.result.pruned),
-        settings_label="SuccessiveHalving", order="exhaustive")
+    strategy = SuccessiveHalvingStrategy(eta=eta,
+                                         min_iterations=min_iterations)
+    result = Tuner(space, base, strategy=strategy, clock=clock).tune(benchmark)
+    return dataclasses.replace(result, settings_label="SuccessiveHalving",
+                               order="exhaustive")
 
 
 def standard_techniques(base: EvaluationSettings,

@@ -48,3 +48,46 @@ def test_duplicate_param_values_rejected():
 def test_narrow_unknown_param():
     with pytest.raises(KeyError):
         grid(x=(1,)).narrow(y=(2,))
+
+
+def test_cardinality_computed_once():
+    """Satellite fix: the filtered count is cached — constraints must not
+    re-run the full product on every access (reports read this per
+    render)."""
+    calls = {"n": 0}
+
+    def constraint(cfg):
+        calls["n"] += 1
+        return cfg["n"] != cfg["m"]
+
+    space = grid(n=(1, 2, 3, 4), m=(1, 2, 3, 4)).constrain(constraint)
+    assert space.cardinality == 12
+    first = calls["n"]
+    assert space.cardinality == 12
+    assert space.cardinality == 12
+    assert calls["n"] == first              # cached, not re-enumerated
+    # derived spaces compute their own count
+    narrowed = space.narrow(n=(1, 2))
+    assert narrowed.cardinality == 6
+    assert space.cardinality == 12
+
+
+def test_contains_checks_domains_and_constraints():
+    space = grid(n=(1, 2, 3), m=(1, 2, 3)).constrain(
+        lambda c: c["n"] <= c["m"])
+    assert {"n": 1, "m": 2} in space
+    assert {"n": 3, "m": 1} not in space    # constraint violated
+    assert {"n": 9, "m": 1} not in space    # out of domain
+    assert {"n": 1} not in space            # missing param
+    assert "nope" not in space
+
+
+def test_project_snaps_to_nearest_in_space_config():
+    space = grid(n=(256, 512, 1024), k=(64, 128))
+    assert space.project({"n": 512, "k": 64}) == {"n": 512, "k": 64}
+    assert space.project({"n": 600, "k": 100}) == {"n": 512, "k": 128}
+    # unknown params ignored, missing ones default to the first value
+    assert space.project({"x": 3}) == {"n": 256, "k": 64}
+    # a projection that violates a constraint is unusable
+    constrained = space.constrain(lambda c: c["n"] > 256)
+    assert constrained.project({"x": 3}) is None

@@ -1,0 +1,464 @@
+"""Strategy layer: ask/tell contract, the strategy x backend cross-product,
+successive-halving parity with the legacy loop, process-pool picklability,
+and transfer-tuning seeds (unit + CLI subprocess)."""
+
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (Batch, EvaluationSettings, ExhaustiveStrategy,
+                        NeighborhoodStrategy, ProcessPoolBackend,
+                        RandomSearchStrategy, SearchStrategy, SerialBackend,
+                        SimulatedShardedBackend, SuccessiveHalvingStrategy,
+                        ThreadPoolBackend, TrialCache, Tuner, grid,
+                        tune_successive_halving)
+from repro.core.stop_conditions import Direction
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def quadratic_benchmark(cfg):
+    """Deterministic module-level objective — picklable for the process
+    pool — with the optimum at x=7 (score 100)."""
+    mu = 100.0 - (cfg["x"] - 7) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+def plane_benchmark(cfg):
+    """Two-parameter deterministic objective, optimum at (a=3, b=20)."""
+    mu = 50.0 - abs(cfg["a"] - 3) - abs(cfg["b"] - 20) / 10.0
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+SETTINGS = EvaluationSettings(max_invocations=3, max_iterations=20,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+STRATEGIES = {
+    "exhaustive": lambda: ExhaustiveStrategy(),
+    "halving": lambda: SuccessiveHalvingStrategy(eta=3),
+    "random": lambda: RandomSearchStrategy(budget=12, seed=0),
+    "neighborhood": lambda: NeighborhoodStrategy(),
+}
+
+BACKENDS = {
+    "serial": lambda: SerialBackend(),
+    "thread": lambda: ThreadPoolBackend(3),
+    "process": lambda: ProcessPoolBackend(2),
+    "simulated": lambda: SimulatedShardedBackend(4),
+}
+
+
+# ---------------------------------------------------------------------------
+# The acceptance cross-product: every strategy through the same engine on
+# every backend, same optimum on a deterministic synthetic objective
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy_name", sorted(STRATEGIES))
+@pytest.mark.parametrize("backend_name", sorted(BACKENDS))
+def test_strategy_backend_cross_product_finds_optimum(strategy_name,
+                                                      backend_name):
+    space = grid(x=tuple(range(12)))
+    strategy = STRATEGIES[strategy_name]()
+    backend = BACKENDS[backend_name]()
+    result = Tuner(space, SETTINGS, strategy=strategy).tune(
+        quadratic_benchmark, backend=backend)
+    assert result.best_config == {"x": 7}, (strategy_name, backend_name)
+    assert result.best_score == pytest.approx(100.0)
+    assert result.strategy == strategy.name
+    assert result.backend == backend.name
+    assert len(result.batches) >= 1
+    assert sum(b.size for b in result.batches) == len(result.trials)
+
+
+# ---------------------------------------------------------------------------
+# Ask/tell contract
+# ---------------------------------------------------------------------------
+
+
+class _ContractStrategy(SearchStrategy):
+    """Scripted strategy asserting every outcome is told before the next
+    ask (the engine/backend guarantee round-synchronized strategies rely
+    on)."""
+
+    name = "contract"
+
+    def reset(self, space, settings, seeds=()):
+        self._queue = list(space.configs())
+        self._outstanding = 0
+        self.batches_asked = 0
+
+    def ask(self, n):
+        assert self._outstanding == 0, \
+            "ask() called with outcomes still untold"
+        if not self._queue:
+            return None
+        batch = self._queue[:self._cap(n, len(self._queue))]
+        del self._queue[:len(batch)]
+        self._outstanding = len(batch)
+        self.batches_asked += 1
+        return Batch(tuple(batch))
+
+    def tell(self, config, result):
+        self._outstanding -= 1
+
+
+@pytest.mark.parametrize("backend_name", ["serial", "thread", "simulated"])
+def test_every_outcome_told_before_next_ask(backend_name):
+    space = grid(x=tuple(range(10)))
+    strategy = _ContractStrategy()
+    result = Tuner(space, SETTINGS, strategy=strategy).tune(
+        quadratic_benchmark, backend=BACKENDS[backend_name]())
+    assert len(result.trials) == 10
+    assert strategy.batches_asked == len(result.batches)
+
+
+def test_batch_settings_override_controls_budget():
+    """A halving rung's per-batch settings must actually reach the
+    evaluator: rung 0 trials spend exactly min_iterations samples, later
+    rungs eta times more."""
+    base = EvaluationSettings(max_time_s=30.0)
+    strategy = SuccessiveHalvingStrategy(eta=4, min_iterations=4)
+    result = Tuner(grid(x=tuple(range(16))), base, strategy=strategy).tune(
+        quadratic_benchmark)
+    per_trial = [t.result.total_samples for t in result.trials]
+    assert per_trial[:16] == [4] * 16            # rung 0: budget 4
+    assert set(per_trial[16:20]) == {16}         # rung 1: budget 4*eta
+    assert result.best_config == {"x": 7}
+
+
+# ---------------------------------------------------------------------------
+# Successive halving: parity with the legacy loop
+# ---------------------------------------------------------------------------
+
+
+def test_halving_strategy_matches_legacy_wrapper():
+    """The ported strategy reproduces the old tune_successive_halving
+    trial schedule and winner on a fixed synthetic benchmark."""
+    base = EvaluationSettings(max_time_s=30.0)
+    via_wrapper = tune_successive_halving(grid(x=tuple(range(16))),
+                                          quadratic_benchmark, base, eta=4)
+    via_engine = Tuner(grid(x=tuple(range(16))), base,
+                       strategy=SuccessiveHalvingStrategy(
+                           eta=4, min_iterations=4)).tune(quadratic_benchmark)
+    assert via_wrapper.best_config == via_engine.best_config == {"x": 7}
+    assert via_wrapper.best_score == via_engine.best_score
+    assert [t.config for t in via_wrapper.trials] == \
+        [t.config for t in via_engine.trials]
+    assert via_wrapper.total_samples == via_engine.total_samples
+    assert via_wrapper.settings_label == "SuccessiveHalving"
+    # the strategy path gains what the legacy loop never had
+    assert via_engine.strategy == "halving"
+    assert len(via_engine.batches) >= 2          # multiple rungs
+
+
+def test_halving_runs_with_cache_and_backend(tmp_path):
+    """The port gives halving what the old loop lacked: backends and a
+    persistent cache (rung trials are persisted, not replayed)."""
+    cache = TrialCache(tmp_path / "h.jsonl", fingerprint="fp")
+    base = EvaluationSettings(max_time_s=30.0)
+    result = Tuner(grid(x=tuple(range(16))), base,
+                   strategy=SuccessiveHalvingStrategy(eta=4)).tune(
+        quadratic_benchmark, backend=ThreadPoolBackend(4),
+        cache=cache.bound("b"))
+    assert result.best_config == {"x": 7}
+    assert result.backend == "thread"
+    assert len(cache) > 0
+    # deepest-rung result persisted last wins; strategy name recorded
+    assert all(t.strategy == "halving" for t in cache.trials())
+
+
+# ---------------------------------------------------------------------------
+# Random search and neighborhood specifics
+# ---------------------------------------------------------------------------
+
+
+def test_random_search_respects_budget():
+    result = Tuner(grid(x=tuple(range(12))), SETTINGS,
+                   strategy=RandomSearchStrategy(budget=5, seed=3)).tune(
+        quadratic_benchmark)
+    assert len(result.trials) == 5
+    seen = {t.config["x"] for t in result.trials}
+    assert len(seen) == 5                        # without replacement
+
+
+def test_neighborhood_climbs_multi_param_space():
+    space = grid(a=(1, 2, 3, 4, 5), b=(10, 20, 30, 40))
+    result = Tuner(space, SETTINGS,
+                   strategy=NeighborhoodStrategy()).tune(plane_benchmark)
+    assert result.best_config == {"a": 3, "b": 20}
+    assert len(result.trials) < space.cardinality    # climbed, not swept
+
+
+def test_neighborhood_respects_constraints():
+    space = grid(x=tuple(range(12))).constrain(lambda c: c["x"] != 6)
+    result = Tuner(space, SETTINGS,
+                   strategy=NeighborhoodStrategy()).tune(quadratic_benchmark)
+    # the climb from x=0 stalls at the x=6 hole: 5 is a local optimum
+    assert result.best_config == {"x": 5}
+    assert all(t.config["x"] != 6 for t in result.trials)
+
+
+def test_exhaustive_order_alias_and_strategy_conflict():
+    space = grid(x=(1, 2, 3))
+    tuner = Tuner(space, SETTINGS, order="reverse")
+    result = tuner.tune(quadratic_benchmark)
+    assert [t.config["x"] for t in result.trials] == [3, 2, 1]
+    assert result.order == "reverse"
+    with pytest.raises(ValueError):
+        Tuner(space, SETTINGS, strategy=ExhaustiveStrategy(),
+              order="reverse")
+
+
+# ---------------------------------------------------------------------------
+# Process pool: equivalence + picklability regression
+# ---------------------------------------------------------------------------
+
+
+def test_process_pool_matches_serial_best():
+    space = grid(x=tuple(range(12)))
+    serial = Tuner(space, SETTINGS).tune(quadratic_benchmark)
+    proc = Tuner(space, SETTINGS).tune(quadratic_benchmark,
+                                       backend=ProcessPoolBackend(2))
+    assert proc.best_config == serial.best_config
+    assert proc.best_score == serial.best_score
+    assert len(proc.trials) == len(serial.trials)
+    assert proc.n_workers == 2 and proc.backend == "process"
+
+
+def test_process_pool_rejects_unpicklable_benchmark():
+    """Regression: a closure benchmark must fail fast with a clear error,
+    not die inside the pool."""
+    space = grid(x=(1, 2))
+    closure_benchmark = lambda cfg: (lambda: (lambda: 1.0))  # noqa: E731
+    with pytest.raises(TypeError, match="picklable"):
+        Tuner(space, SETTINGS).tune(closure_benchmark,
+                                    backend=ProcessPoolBackend(2))
+
+
+def test_process_pool_rejects_bad_worker_count():
+    with pytest.raises(ValueError):
+        ProcessPoolBackend(0)
+
+
+# ---------------------------------------------------------------------------
+# Transfer tuning: seeds from a related benchmark's cache
+# ---------------------------------------------------------------------------
+
+
+def test_suggest_seeds_best_first(tmp_path):
+    cache = TrialCache(tmp_path / "donor.jsonl", fingerprint="fp")
+    tuner = Tuner(grid(x=tuple(range(12))), SETTINGS)
+    tuner.tune(quadratic_benchmark, cache=cache.bound("donor"))
+    seeds = cache.suggest_seeds("donor", direction=Direction.MAXIMIZE)
+    assert seeds[0] == {"x": 7}                  # incumbent first
+    assert len(seeds) == 3
+    assert cache.suggest_seeds("missing") == []
+
+
+def test_transfer_seeds_warm_start_neighborhood(tmp_path):
+    """A related benchmark's cached incumbent starts the climb at the
+    optimum: the whole search collapses to the seed round + one
+    non-improving neighbor round."""
+    cache = TrialCache(tmp_path / "donor.jsonl", fingerprint="fp")
+    Tuner(grid(x=tuple(range(12))), SETTINGS).tune(
+        quadratic_benchmark, cache=cache.bound("donor"))
+    seeds = cache.suggest_seeds("donor", limit=1)
+    result = Tuner(grid(x=tuple(range(12))), SETTINGS,
+                   strategy=NeighborhoodStrategy()).tune(
+        quadratic_benchmark, seeds=seeds)
+    assert result.trials[0].config == {"x": 7}   # climb starts at the seed
+    assert result.best_config == {"x": 7}
+    assert result.n_seeded == 1
+    assert len(result.trials) <= 3               # seed + its two neighbors
+
+
+def test_transfer_seeds_project_into_space():
+    """Foreign-space seeds snap to the nearest in-space config; unrelated
+    parameters fall back to domain defaults."""
+    space = grid(n=(256, 512, 1024), k=(64, 128))
+    result = Tuner(space, SETTINGS, strategy=NeighborhoodStrategy()).tune(
+        lambda cfg: (lambda: (lambda: float(cfg["n"] + cfg["k"]))),
+        seeds=[{"n": 600, "x": 9}])
+    assert result.trials[0].config == {"n": 512, "k": 64}
+    assert result.n_seeded == 1
+
+
+def test_exhaustive_front_loads_seeds():
+    space = grid(x=tuple(range(8)))
+    result = Tuner(space, SETTINGS).tune(quadratic_benchmark,
+                                         seeds=[{"x": 5}])
+    assert [t.config["x"] for t in result.trials] == [5, 0, 1, 2, 3, 4, 6, 7]
+
+
+# ---------------------------------------------------------------------------
+# CLI: --strategy / --budget / --transfer-from (acceptance: dgemm
+# warm-started from a cached synthetic session)
+# ---------------------------------------------------------------------------
+
+
+def _run_tune_cli(tmp_path, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "tune.py"),
+         "--cache-dir", str(tmp_path), *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=300)
+
+
+def test_cli_transfer_from_synthetic_warm_starts_dgemm(tmp_path):
+    donor = _run_tune_cli(tmp_path, "--session", "donor",
+                          "--benchmark", "synthetic")
+    assert donor.returncode == 0, donor.stderr
+    proc = _run_tune_cli(tmp_path, "--session", "target",
+                         "--benchmark", "dgemm",
+                         "--strategy", "neighborhood", "--budget", "3",
+                         "--transfer-from", "donor:synthetic")
+    assert proc.returncode == 0, proc.stderr
+    # the donor's incumbents were offered as seeds...
+    assert "transfer   : 3 seed(s) from session 'donor' " \
+        "(benchmark 'synthetic')" in proc.stdout
+    # ...projected into the dgemm space (no shared params -> one distinct
+    # default-projected seed) and evaluated first
+    assert "seeded=1" in proc.stdout
+    first_trial = next(line for line in proc.stdout.splitlines()
+                       if line.lstrip().startswith("[   1/"))
+    assert "{'n': 256, 'm': 256, 'k': 64}" in first_trial
+    assert "strategy  : neighborhood" in proc.stdout
+
+
+def test_cli_halving_strategy_on_synthetic(tmp_path):
+    proc = _run_tune_cli(tmp_path, "--session", "h",
+                         "--benchmark", "synthetic", "--strategy", "halving")
+    assert proc.returncode == 0, proc.stderr
+    assert "strategy   : halving" in proc.stdout
+    assert "best      : {'x': 7}" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Settings parity: rung-truncated trials must never serve as full-budget
+# results (review finding)
+# ---------------------------------------------------------------------------
+
+
+def test_rung_trials_never_served_to_full_budget_session(tmp_path):
+    """A halving session's rung-truncated records must not satisfy (or
+    warm-start) a later exhaustive session under the tuner's own
+    settings."""
+    cache = TrialCache(tmp_path / "s.jsonl", fingerprint="fp")
+    base = EvaluationSettings(max_time_s=30.0)
+    Tuner(grid(x=tuple(range(16))), base,
+          strategy=SuccessiveHalvingStrategy(eta=4)).tune(
+        quadratic_benchmark, cache=cache.bound("b"))
+    assert len(cache.trials()) == 16             # every config persisted
+
+    replay = TrialCache(tmp_path / "s.jsonl", fingerprint="fp")
+    result = Tuner(grid(x=tuple(range(16))), base).tune(
+        quadratic_benchmark, cache=replay.bound("b"), warm_start=True)
+    assert result.n_cached == 0                  # nothing truncated served
+    assert result.improvements[0][0] is not None
+    # the warm-start seed did not come from a truncated rung record: the
+    # first accepted incumbent is a fresh full-budget evaluation
+    full = 16 * 10 * 200                         # invocations x iterations
+    assert result.total_samples == full
+
+    # a same-settings exhaustive rerun, by contrast, is fully served
+    again = Tuner(grid(x=tuple(range(16))), base).tune(
+        quadratic_benchmark,
+        cache=TrialCache(tmp_path / "s.jsonl", fingerprint="fp").bound("b"))
+    assert again.n_cached == 16
+
+
+def test_settings_key_ignores_nothing_for_legacy_records(tmp_path):
+    """Records without a settings_key (pre-strategy caches, hand-written
+    fixtures) keep matching any read — old session files stay resumable."""
+    from repro.core import settings_key
+    from tests.test_cache import make_result
+
+    cache = TrialCache(tmp_path / "legacy.jsonl", fingerprint="fp")
+    cache.put("b", {"x": 1}, make_result(10.0))  # no settings_key recorded
+    key = settings_key(SETTINGS)
+    assert cache.get("b", {"x": 1}, settings_key=key) is not None
+    assert cache.best("b", Direction.MAXIMIZE, settings_key=key) is not None
+
+
+def test_unconstrained_backends_get_full_unit_batches():
+    """Serial/thread impose no round structure, so non-adaptive strategies
+    propose everything at once (no mid-queue barriers); round-synchronized
+    backends still get n_workers-wide rounds."""
+    space = grid(x=tuple(range(12)))
+    serial = Tuner(space, SETTINGS).tune(quadratic_benchmark)
+    assert len(serial.batches) == 1 and serial.batches[0].size == 12
+    threaded = Tuner(space, SETTINGS).tune(quadratic_benchmark,
+                                           backend=ThreadPoolBackend(4))
+    assert len(threaded.batches) == 1
+    simulated = Tuner(space, SETTINGS).tune(quadratic_benchmark,
+                                            backend=SimulatedShardedBackend(4))
+    assert [b.size for b in simulated.batches] == [4, 4, 4]
+
+
+def test_halving_run_does_not_clobber_full_budget_records(tmp_path):
+    """Review regression: rung records live under their own settings key,
+    so an interleaved halving run must not invalidate an existing
+    session's full-budget cache."""
+    path = tmp_path / "s.jsonl"
+    space = grid(x=tuple(range(12)))
+    first = Tuner(space, SETTINGS).tune(
+        quadratic_benchmark,
+        cache=TrialCache(path, fingerprint="fp").bound("b"))
+    assert first.n_cached == 0
+    Tuner(space, SETTINGS, strategy=SuccessiveHalvingStrategy(eta=3)).tune(
+        quadratic_benchmark,
+        cache=TrialCache(path, fingerprint="fp").bound("b"))
+    resumed = Tuner(space, SETTINGS).tune(
+        quadratic_benchmark,
+        cache=TrialCache(path, fingerprint="fp").bound("b"))
+    assert resumed.n_cached == 12                # fully served, not clobbered
+    assert resumed.best_config == first.best_config
+
+
+def test_thread_backend_persists_trials_as_they_finish(tmp_path):
+    """Review regression: with the thread backend a completed trial must
+    hit the cache file immediately (a killed run keeps it), not at the
+    batch end — the slow trial here blocks until it can read the fast
+    trial's record through the cache."""
+    import threading  # noqa: F401  (documents the concurrency under test)
+    import time as _time
+
+    cache = TrialCache(tmp_path / "t.jsonl", fingerprint="fp")
+    bound = cache.bound("b")
+
+    def benchmark(cfg):
+        mu = float(10 + cfg["x"])
+
+        def factory():
+            def sample():
+                if cfg["x"] == 1:
+                    deadline = _time.time() + 15.0
+                    while bound.get({"x": 0}) is None:
+                        assert _time.time() < deadline, \
+                            "fast trial not persisted while slow in flight"
+                        _time.sleep(0.01)
+                return mu
+            return sample
+
+        return factory
+
+    result = Tuner(grid(x=(0, 1)), SETTINGS).tune(
+        benchmark, backend=ThreadPoolBackend(2), cache=bound)
+    assert result.best_config == {"x": 1}
+    assert len(cache.trials()) == 2

@@ -100,3 +100,30 @@ def test_successive_halving_finds_optimum(rng):
     full = 16 * 5 * 100
     assert result.total_samples < full / 10
     assert result.settings_label == "SuccessiveHalving"
+
+
+def test_compare_techniques_threads_backend_cache_warm_start(tmp_path):
+    """Satellite: the Tables VIII-XI grid runs parallel and resumable —
+    per-technique cache namespaces, so a replay serves every trial from
+    disk without cross-technique contamination."""
+    from repro.core import ThreadPoolBackend, TrialCache
+
+    def bench(cfg):
+        mu = 100.0 - (cfg["x"] - 7) ** 2
+        return lambda: (lambda: mu)
+
+    space = grid(x=tuple(range(8)))
+    cache = TrialCache(tmp_path / "grid.jsonl", fingerprint="fp")
+    first = compare_techniques(space, bench, BASE, cache=cache,
+                               backend=ThreadPoolBackend(4))
+    assert all(r.best_config == {"x": 7} for r in first.values())
+    assert all(r.backend == "thread" for r in first.values())
+    assert all(r.n_cached == 0 for r in first.values())
+
+    replay_cache = TrialCache(tmp_path / "grid.jsonl", fingerprint="fp")
+    replay = compare_techniques(space, bench, BASE, cache=replay_cache,
+                                warm_start=True)
+    for label, r in replay.items():
+        assert r.n_cached == len(r.trials) == 8, label
+        assert r.best_config == first[label].best_config
+        assert r.best_score == first[label].best_score
