@@ -46,6 +46,10 @@ def main() -> None:
     ap.add_argument("--report", action="store_true",
                     help="after the benches, render the cache-backed "
                          "roofline dashboard from the --resume cache dir")
+    ap.add_argument("--html", default=None, metavar="PATH",
+                    help="after the benches, write a self-contained HTML "
+                         "dashboard (rooflines + run-ledger trends and "
+                         "regression verdicts) from the --resume cache dir")
     args = ap.parse_args()
     quick = not args.full
 
@@ -67,7 +71,7 @@ def main() -> None:
             print(f"[benchmarks] {name} failed: {e}", file=sys.stderr)
             raise
 
-    if args.report:
+    if args.report or args.html:
         import pathlib
 
         from repro.core import build_reports, load_trials
@@ -76,18 +80,30 @@ def main() -> None:
         cache_dir = pathlib.Path(args.resume or ".tuning_sessions")
         trials = load_trials(cache_dir) if cache_dir.is_dir() else []
         reports, skipped = build_reports(trials)
-        if reports:
-            print()
-            print(render_markdown(reports, skipped))
-        elif skipped:
-            print(f"\n[report] no reportable fingerprint under {cache_dir}/:",
-                  file=sys.stderr)
-            for fp, reason in skipped:
-                print(f"[report]   {fp}: {reason}", file=sys.stderr)
-        else:
-            print(f"\n[report] no cached trials under {cache_dir}/ — run "
-                  "with --resume so roofline_model persists its dgemm/triad "
-                  "sessions first.", file=sys.stderr)
+        if args.report:
+            if reports:
+                print()
+                print(render_markdown(reports, skipped))
+            elif skipped:
+                print(f"\n[report] no reportable fingerprint under "
+                      f"{cache_dir}/:", file=sys.stderr)
+                for fp, reason in skipped:
+                    print(f"[report]   {fp}: {reason}", file=sys.stderr)
+            else:
+                print(f"\n[report] no cached trials under {cache_dir}/ — "
+                      "run with --resume so roofline_model persists its "
+                      "dgemm/triad sessions first.", file=sys.stderr)
+        if args.html:
+            from repro.history import RunLedger, write_dashboard
+
+            ledger_path = cache_dir / "history.jsonl"
+            ledger = RunLedger(ledger_path) if ledger_path.exists() else None
+            stamp = time.strftime("%Y-%m-%d %H:%M UTC", time.gmtime())
+            write_dashboard(args.html, reports, skipped, ledger=ledger,
+                            title="Benchmark dashboard",
+                            subtitle=f"generated {stamp} from "
+                                     f"{cache_dir}/")
+            print(f"[report] wrote {args.html}")
 
 
 if __name__ == "__main__":

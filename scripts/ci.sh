@@ -20,4 +20,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 echo "== doc snippets =="
 python scripts/check_docs.py
 
+echo "== perf gate (dry-run, non-blocking) =="
+# reports ledger drift without failing the build; flip off --dry-run in a
+# deployment with a persistent .tuning_sessions/history.jsonl to enforce
+python scripts/perf_gate.py --dry-run
+
 echo "== ci.sh: all green =="

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""CI performance gate over the run ledger: fail on confirmed regressions.
+
+    PYTHONPATH=src python scripts/perf_gate.py                    # default ledger
+    PYTHONPATH=src python scripts/perf_gate.py .tuning_sessions/history.jsonl
+    PYTHONPATH=src python scripts/perf_gate.py --dry-run          # never fails CI
+
+For every (benchmark, hardware fingerprint) series in the ledger, the
+newest run's incumbent mean is compared against the best historical run
+with a Welch CI on the difference of means (reservoir-bootstrap fallback
+at low sample counts). A drop is only *confirmed* — and only then does the
+gate exit non-zero — when the CI excludes zero AND the effect exceeds
+``--min-effect`` (default 2%, the paper's early-termination error budget).
+Improvements and statistically-insignificant wobble pass.
+
+Exit codes: 0 clean (or ``--dry-run``), 1 confirmed regression(s),
+2 usage errors (missing ledger outside ``--dry-run``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_REPO), str(_REPO / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import Direction  # noqa: E402
+from repro.history import RunLedger, detect_regressions  # noqa: E402
+from repro.history.regression import MIN_COUNT_WELCH, MIN_EFFECT  # noqa: E402
+
+DEFAULT_LEDGER = ".tuning_sessions/history.jsonl"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("ledger", nargs="?", default=DEFAULT_LEDGER,
+                    help=f"run-ledger JSONL path (default {DEFAULT_LEDGER})")
+    ap.add_argument("--benchmark", default=None,
+                    help="gate only this benchmark's series")
+    ap.add_argument("--fingerprint", default=None,
+                    help="gate only this hardware fingerprint's series")
+    ap.add_argument("--confidence", type=float, default=0.99)
+    ap.add_argument("--min-effect", type=float, default=MIN_EFFECT,
+                    metavar="FRAC",
+                    help="relative drift below this is never confirmed "
+                         f"(default {MIN_EFFECT:g} — the paper's error "
+                         "budget)")
+    ap.add_argument("--min-count", type=int, default=MIN_COUNT_WELCH,
+                    help="pooled samples per run required for the Welch "
+                         "path; below it the bootstrap fallback runs")
+    ap.add_argument("--direction", default=None,
+                    choices=("maximize", "minimize"),
+                    help="override the direction stamped on the records")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report verdicts but always exit 0 (non-blocking "
+                         "CI step; also tolerates a missing ledger)")
+    args = ap.parse_args()
+
+    path = pathlib.Path(args.ledger)
+    if not path.exists():
+        msg = f"perf-gate: no ledger at {path}"
+        if args.dry_run:
+            print(f"{msg} — nothing to gate (dry-run, ok)")
+            return 0
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+
+    direction = Direction(args.direction) if args.direction else None
+    report = detect_regressions(
+        RunLedger(path), benchmark=args.benchmark,
+        fingerprint=args.fingerprint, confidence=args.confidence,
+        direction=direction, min_effect=args.min_effect,
+        min_count=args.min_count)
+    sys.stdout.write(report.render_text())
+    if args.dry_run:
+        if not report.ok:
+            print("perf-gate: dry-run — regressions reported but not "
+                  "enforced")
+        return 0
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,6 +4,8 @@
     PYTHONPATH=src python scripts/roofline_report.py .tuning_sessions/nightly.jsonl
     PYTHONPATH=src python scripts/roofline_report.py .tuning_sessions \
         --csv roofline.csv
+    PYTHONPATH=src python scripts/roofline_report.py .tuning_sessions \
+        --html roofline.html --history .tuning_sessions/history.jsonl
 
 Takes one or more cache files (or directories of ``*.jsonl`` session
 caches), groups the trials by benchmark × hardware fingerprint, extracts
@@ -12,6 +14,11 @@ incumbents (memory slopes ``B_a``), and emits a markdown dashboard per
 fingerprint — measured peaks with confidence intervals from the stored
 Welford moments, an ASCII roofline with achieved-kernel markers, a
 %-of-roof gap table — plus a side-by-side comparison across fingerprints.
+
+``--html`` additionally writes a **self-contained HTML dashboard** (inline
+CSS/JS/SVG, no external deps); with ``--history LEDGER`` it also embeds
+per-series trend lines with CI bands and the regression verdicts from the
+performance-history ledger (see ``docs/history.md``).
 """
 
 from __future__ import annotations
@@ -45,6 +52,12 @@ def main() -> int:
                     help="write the markdown dashboard here (default stdout)")
     ap.add_argument("--csv", default=None, metavar="PATH",
                     help="also write the flat CSV (curves, marks, gaps)")
+    ap.add_argument("--html", default=None, metavar="PATH",
+                    help="also write a self-contained HTML dashboard "
+                         "(inline CSS/JS/SVG, no external deps)")
+    ap.add_argument("--history", default=None, metavar="LEDGER",
+                    help="run-ledger JSONL to embed trend lines and "
+                         "regression verdicts into the --html dashboard")
     args = ap.parse_args()
 
     trials = []
@@ -63,23 +76,50 @@ def main() -> int:
         trials, dgemm_benchmark=args.dgemm_benchmark,
         triad_benchmark=args.triad_benchmark, confidence=args.confidence)
     if not reports:
-        print("error: no reportable fingerprint — need unpruned trials of "
+        # a --history ledger can still carry an HTML trend dashboard even
+        # when no fingerprint has roofline-complete (dgemm+triad) trials
+        print("no reportable fingerprint — need unpruned trials of "
               f"both {args.dgemm_benchmark!r} and {args.triad_benchmark!r}:",
               file=sys.stderr)
         for fp, reason in skipped:
             print(f"  {fp}: {reason}", file=sys.stderr)
-        return 1
+        if not (args.html and args.history):
+            print("error: nothing to render", file=sys.stderr)
+            return 1
 
+    # in the ledger-only continue-path reports is empty: --out/--csv still
+    # write (a header-only dashboard/CSV), never silently skip a requested
+    # artifact while exiting 0
     markdown = render_markdown(reports, skipped)
     if args.out:
         pathlib.Path(args.out).write_text(markdown, encoding="utf-8")
         print(f"wrote {args.out}")
-    else:
+    elif reports:
         sys.stdout.write(markdown)
     if args.csv:
         pathlib.Path(args.csv).write_text(render_csv(reports),
                                           encoding="utf-8")
         print(f"wrote {args.csv}")
+    if args.html:
+        import time
+
+        from repro.history import RunLedger, write_dashboard
+
+        ledger = None
+        if args.history:
+            history_path = pathlib.Path(args.history)
+            if not history_path.exists():
+                print(f"error: no such ledger: {args.history}",
+                      file=sys.stderr)
+                return 2
+            ledger = RunLedger(history_path)
+        stamp = time.strftime("%Y-%m-%d %H:%M UTC", time.gmtime())
+        write_dashboard(args.html, reports, skipped, ledger=ledger,
+                        title="Roofline & performance history",
+                        subtitle=f"generated {stamp} from "
+                                 f"{len(trials)} cached trials",
+                        confidence=args.confidence)
+        print(f"wrote {args.html}")
     return 0
 
 

@@ -18,6 +18,11 @@ with another session's cached incumbents (transfer tuning). Halving rung
 trials are persisted but never replayed on resume: they are measured
 under per-rung budgets, and records only satisfy cache reads made under
 the same evaluation settings.
+
+Every completed run also appends its incumbent to the performance-history
+ledger (``<cache-dir>/history.jsonl``); ``--history`` prints the series'
+trend (sparkline + per-run CIs) and regression verdict afterwards — see
+``scripts/perf_gate.py`` and ``docs/history.md``.
 """
 
 from __future__ import annotations
@@ -105,6 +110,10 @@ def main() -> int:
     ap.add_argument("--report", action="store_true",
                     help="after tuning, render the cache-backed roofline "
                          "dashboard from this session's trial cache")
+    ap.add_argument("--history", action="store_true",
+                    help="after tuning, print this series' run-ledger "
+                         "trend (sparkline + per-run CIs) and its "
+                         "regression verdict")
     args = ap.parse_args()
 
     from benchmarks.common import (dgemm_benchmark, dgemm_space,
@@ -179,8 +188,10 @@ def main() -> int:
         print(f"  [{done:4d}/{space.cardinality}] {cfg} -> {tag} "
               f"({res.stop_reason})")
 
+    import time
+
     result = session.run(backend=args.backend, progress=progress,
-                         seeds=seeds)
+                         seeds=seeds, timestamp=time.time())
     print(f"\nbest      : {result.best_config}  score={result.best_score}")
     print(f"trials    : {len(result.trials)}  cached={result.n_cached}  "
           f"pruned={result.n_pruned}  samples={result.total_samples}")
@@ -193,6 +204,17 @@ def main() -> int:
         trail = " -> ".join(f"{score:.2f}"
                             for _, score in result.improvements)
         print(f"incumbent : {trail}")
+
+    if args.history:
+        from repro.history import detect_regressions, render_trend_text
+        runs = session.ledger.series(args.benchmark,
+                                     session.cache.fingerprint)
+        print()
+        print(render_trend_text(runs))
+        report = detect_regressions(session.ledger,
+                                    benchmark=args.benchmark,
+                                    fingerprint=session.cache.fingerprint)
+        print(report.render_text(), end="")
 
     if args.report:
         from repro.core import build_reports, load_trials

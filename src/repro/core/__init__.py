@@ -3,12 +3,13 @@
 Public API re-exports. See DESIGN.md §2 for the layer map.
 """
 
-from .cache import (CACHE_VERSION, BoundCache, CachedTrial, TrialCache,
-                    TuningSession, config_key, hardware_fingerprint,
-                    iter_trials, load_trials, settings_key)
+from .cache import (AUTO_LEDGER, CACHE_VERSION, BoundCache, CachedTrial,
+                    TrialCache, TuningSession, config_key,
+                    hardware_fingerprint, iter_trials, load_trials,
+                    settings_key)
 from .confidence import (Interval, ReservoirBootstrap, ci_mean,
                          median_of_means, normal_quantile,
-                         sign_test_median_ci, t_quantile)
+                         sign_test_median_ci, spearman, t_quantile)
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
                         InvocationResult, timed_sampler)
 from .executor import (Batch, BatchStats, ExecutionBackend, ExecutionStats,
@@ -36,11 +37,11 @@ from .tuner import (BenchmarkFactory, EvaluateTask, TrialRecord, Tuner,
 from .welford import WelfordState, from_samples, init, merge, tree_merge, update
 
 __all__ = [
-    "BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
+    "AUTO_LEDGER", "BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
     "TuningSession", "config_key", "hardware_fingerprint", "iter_trials",
     "load_trials", "settings_key",
     "Interval", "ReservoirBootstrap", "ci_mean", "median_of_means",
-    "normal_quantile", "sign_test_median_ci", "t_quantile",
+    "normal_quantile", "sign_test_median_ci", "spearman", "t_quantile",
     "FingerprintReport", "IncumbentTrial", "build_reports",
     "dgemm_config_intensity", "extract_incumbent", "group_by_fingerprint",
     "pooled_state", "render_csv", "render_markdown", "trials_from_result",

@@ -43,13 +43,15 @@ import threading
 from pathlib import Path
 from typing import Iterable, Iterator, Optional
 
+from .confidence import spearman
 from .evaluator import EvalResult, InvocationResult
 from .searchspace import Config
 from .stop_conditions import Direction
 
-__all__ = ["BoundCache", "CACHE_VERSION", "CachedTrial", "TrialCache",
-           "TuningSession", "config_key", "hardware_fingerprint",
-           "iter_trials", "load_trials", "settings_key"]
+__all__ = ["AUTO_LEDGER", "BoundCache", "CACHE_VERSION", "CachedTrial",
+           "TrialCache", "TuningSession", "config_key",
+           "hardware_fingerprint", "iter_trials", "load_trials",
+           "settings_key"]
 
 CACHE_VERSION = 1
 
@@ -343,30 +345,124 @@ class TrialCache:
         configurations of ``benchmark``, best first.
 
         With ``fingerprint=None`` (or this cache's own) the in-memory
-        entries answer directly; another machine's fingerprint re-reads
-        the cache file, since :class:`TrialCache` drops foreign records on
-        load. Timings never transfer across hardware — but *configurations*
-        are still informative starting points, which is all a seed is. Feed
-        the result to ``Tuner.tune(seeds=...)`` (configs are projected into
-        the target space there).
+        entries answer first; when they fill fewer than ``limit`` seeds,
+        *donor* fingerprints found in the cache file top the list up —
+        ranked by :meth:`rank_donors` (Spearman rank-correlation of
+        shared-config scores against this machine, recency fallback), so
+        machines that rank configurations the way this one does get their
+        incumbents trusted first. An explicit foreign ``fingerprint``
+        reads that single donor, since :class:`TrialCache` drops foreign
+        records on load. Timings never transfer across hardware — but
+        *configurations* are still informative starting points, which is
+        all a seed is. Feed the result to ``Tuner.tune(seeds=...)``
+        (configs are projected into the target space there).
         """
-        if fingerprint is None or fingerprint == self.fingerprint:
-            with self._lock:
-                pool = [(cfg, res) for (bench, _), (cfg, res, *_meta)
-                        in self._latest.items()
-                        if bench == benchmark and not res.pruned]
-        else:
-            if not self.path.exists():
-                return []
-            dedup: dict[str, tuple[Config, EvalResult]] = {}
-            for t in iter_trials(self.path):
-                if t.benchmark == benchmark and t.fingerprint == fingerprint \
-                        and not t.result.pruned:
-                    dedup[t.key] = (t.config, t.result)
-            pool = list(dedup.values())
+        if fingerprint is not None and fingerprint != self.fingerprint:
+            pool = list(self._donor_pool(benchmark, fingerprint).values())
+            pool.sort(key=lambda cr: cr[1].score,
+                      reverse=(direction is Direction.MAXIMIZE))
+            return [cfg for cfg, _ in pool[:max(0, limit)]]
+        with self._lock:
+            pool = [(cfg, res) for (bench, _), (cfg, res, *_meta)
+                    in self._latest.items()
+                    if bench == benchmark and not res.pruned]
         pool.sort(key=lambda cr: cr[1].score,
                   reverse=(direction is Direction.MAXIMIZE))
-        return [cfg for cfg, _ in pool[:max(0, limit)]]
+        seeds = [cfg for cfg, _ in pool[:max(0, limit)]]
+        if len(seeds) >= limit:
+            return seeds
+        # top up from donor fingerprints: one file scan serves both the
+        # ranking and the per-donor candidate pools
+        pools, last_seen = self._donor_scan(benchmark)
+        seen = {config_key(cfg) for cfg in seeds}
+        for donor_fp, _rho in self._rank_donors(benchmark, pools, last_seen):
+            donor = list(pools[donor_fp].values())
+            donor.sort(key=lambda cr: cr[1].score,
+                       reverse=(direction is Direction.MAXIMIZE))
+            for cfg, _ in donor:
+                key = config_key(cfg)
+                if key in seen:
+                    continue
+                seen.add(key)
+                seeds.append(cfg)
+                if len(seeds) >= limit:
+                    return seeds
+        return seeds
+
+    def _donor_pool(self, benchmark: str, fingerprint: str,
+                    ) -> dict[str, tuple[Config, EvalResult]]:
+        """Latest unpruned record per config of one foreign fingerprint,
+        re-read from the cache file (foreign records are dropped on load)."""
+        if not self.path.exists():
+            return {}
+        dedup: dict[str, tuple[Config, EvalResult]] = {}
+        for t in iter_trials(self.path):
+            if t.benchmark == benchmark and t.fingerprint == fingerprint \
+                    and not t.result.pruned:
+                dedup[t.key] = (t.config, t.result)
+        return dedup
+
+    def _donor_scan(self, benchmark: str,
+                    ) -> tuple[dict[str, dict[str, tuple[Config, EvalResult]]],
+                               dict[str, int]]:
+        """Single pass over the cache file: every foreign fingerprint's
+        latest unpruned record per config, plus each donor's last write
+        position (the recency-ranking key)."""
+        pools: dict[str, dict[str, tuple[Config, EvalResult]]] = {}
+        last_seen: dict[str, int] = {}
+        if not self.path.exists():
+            return pools, last_seen
+        for pos, t in enumerate(iter_trials(self.path)):
+            if t.benchmark != benchmark or t.fingerprint == self.fingerprint \
+                    or t.result.pruned:
+                continue
+            pools.setdefault(t.fingerprint, {})[t.key] = (t.config, t.result)
+            last_seen[t.fingerprint] = pos
+        return pools, last_seen
+
+    def _rank_donors(self, benchmark: str,
+                     pools: dict[str, dict[str, tuple[Config, EvalResult]]],
+                     last_seen: dict[str, int],
+                     min_overlap: int = 3,
+                     ) -> list[tuple[str, Optional[float]]]:
+        with self._lock:
+            own = {ckey: res.score
+                   for (bench, ckey), (_cfg, res, *_meta)
+                   in self._latest.items()
+                   if bench == benchmark and not res.pruned}
+        correlated: list[tuple[str, float]] = []
+        uncorrelated: list[str] = []
+        for fp, entries in pools.items():
+            shared = sorted(set(entries) & set(own))
+            rho = (spearman([own[k] for k in shared],
+                            [entries[k][1].score for k in shared])
+                   if len(shared) >= min_overlap else None)
+            if rho is None:
+                uncorrelated.append(fp)
+            else:
+                correlated.append((fp, rho))
+        correlated.sort(key=lambda fr: (-fr[1], -last_seen[fr[0]]))
+        uncorrelated.sort(key=lambda fp: -last_seen[fp])
+        return correlated + [(fp, None) for fp in uncorrelated]
+
+    def rank_donors(self, benchmark: str,
+                    min_overlap: int = 3,
+                    ) -> list[tuple[str, Optional[float]]]:
+        """Donor fingerprints for transfer seeding, most trustworthy first.
+
+        A donor whose scores **rank** the shared configurations the same
+        way this machine's do is likely to rank the unshared ones
+        similarly too — so donors are ordered by Spearman rank-correlation
+        of shared-config scores (descending), computed when at least
+        ``min_overlap`` configs overlap with this fingerprint's own
+        records. Donors below the overlap threshold (including every donor
+        when this machine has no trials yet) keep the recency fallback:
+        most recently written first. Returns ``(fingerprint, rho)`` pairs,
+        ``rho=None`` for the recency-ordered tail.
+        """
+        pools, last_seen = self._donor_scan(benchmark)
+        return self._rank_donors(benchmark, pools, last_seen,
+                                 min_overlap=min_overlap)
 
     def bound(self, benchmark: str) -> "BoundCache":
         return BoundCache(self, benchmark)
@@ -403,6 +499,11 @@ class BoundCache:
                                         limit=limit)
 
 
+#: Default sentinel for ``TuningSession(ledger=...)``: create/append the
+#: shared run ledger next to the session caches (``<cache_dir>/history.jsonl``).
+AUTO_LEDGER = object()
+
+
 class TuningSession:
     """A named, resumable tuning run.
 
@@ -411,13 +512,22 @@ class TuningSession:
     evaluations append as they finish, and the incumbent warm-starts from
     the best cached trial. Kill the process at any point and ``run()``
     again — it completes the remaining configs only.
+
+    Every completed ``run()`` also appends one record to the
+    performance-history **run ledger** (``<cache_dir>/history.jsonl`` by
+    default — a shared longitudinal file, unlike the per-session trial
+    caches), so drift across runs of the same benchmark × fingerprint is
+    detectable later (``repro.history``, ``scripts/perf_gate.py``). Pass
+    ``ledger=None`` to disable, or a :class:`~repro.history.ledger.RunLedger`
+    (or path) to redirect.
     """
 
     def __init__(self, name: str, tuner, benchmark,
                  cache_dir: str | os.PathLike = ".tuning_sessions",
                  warm_start: bool = True,
                  fingerprint: Optional[str] = None,
-                 benchmark_name: Optional[str] = None):
+                 benchmark_name: Optional[str] = None,
+                 ledger=AUTO_LEDGER):
         self.name = name
         self.tuner = tuner
         self.benchmark = benchmark
@@ -427,13 +537,28 @@ class TuningSession:
         self.warm_start = warm_start
         self.cache = TrialCache(Path(cache_dir) / f"{name}.jsonl",
                                 fingerprint=fingerprint)
+        if ledger is AUTO_LEDGER or isinstance(ledger, (str, os.PathLike)):
+            # deferred import: repro.history depends on repro.core
+            from repro.history.ledger import RunLedger
+            path = (Path(cache_dir) / "history.jsonl"
+                    if ledger is AUTO_LEDGER else ledger)
+            ledger = RunLedger(path)
+        self.ledger = ledger
 
-    def run(self, backend=None, progress=None, seeds=()):
+    def run(self, backend=None, progress=None, seeds=(), timestamp=None):
         """Execute the wrapped tuner against the session cache. ``seeds``
         are transfer-tuning warm-start configs (see
-        ``TrialCache.suggest_seeds``), forwarded to ``Tuner.tune``."""
+        ``TrialCache.suggest_seeds``), forwarded to ``Tuner.tune``.
+        ``timestamp`` (caller-supplied epoch seconds — core never reads a
+        clock for records) stamps the ledger entry this run appends."""
+        bound_ledger = None
+        if self.ledger is not None:
+            bound_ledger = self.ledger.bound(self.benchmark_name,
+                                             self.cache.fingerprint,
+                                             session=self.name)
         return self.tuner.tune(self.benchmark, progress=progress,
                                backend=backend,
                                cache=self.cache.bound(self.benchmark_name),
                                warm_start=self.warm_start,
-                               seeds=seeds)
+                               seeds=seeds, ledger=bound_ledger,
+                               timestamp=timestamp)

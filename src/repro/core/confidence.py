@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -252,6 +252,45 @@ class ReservoirBootstrap:
 # Robust nonparametric statistics (paper Sec. VII: "basing the stop
 # conditions on other statistics, like the median")
 # ---------------------------------------------------------------------------
+
+
+def _average_ranks(xs: Sequence[float]) -> list[float]:
+    """1-based ranks with ties sharing their average rank."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        avg = (i + j) / 2.0 + 1.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = avg
+        i = j + 1
+    return ranks
+
+
+def spearman(xs: Sequence[float], ys: Sequence[float]) -> Optional[float]:
+    """Spearman rank-correlation of two paired samples (average ranks for
+    ties — the tie-robust form, not the 6Σd² shortcut). ``None`` when a
+    side is degenerate (fewer than two pairs, or all values tied): rank
+    agreement is undefined there, and consumers — e.g. transfer-seed
+    donor ranking in :meth:`~repro.core.cache.TrialCache.rank_donors` —
+    treat it as "no signal" rather than 0.
+    """
+    if len(xs) != len(ys):
+        raise ValueError("paired samples must have equal length")
+    n = len(xs)
+    if n < 2:
+        return None
+    rx, ry = _average_ranks(xs), _average_ranks(ys)
+    mx, my = sum(rx) / n, sum(ry) / n
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx)
+    vy = sum((b - my) ** 2 for b in ry)
+    if vx <= 0.0 or vy <= 0.0:
+        return None
+    return cov / math.sqrt(vx * vy)
 
 
 def median_of_means(samples: Sequence[float], n_blocks: int = 8) -> float:

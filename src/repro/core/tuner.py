@@ -129,7 +129,8 @@ class Tuner:
              progress: Optional[Callable[[Config, EvalResult], None]] = None,
              backend: Optional[ExecutionBackend] = None,
              cache=None, warm_start: bool = False,
-             seeds: Sequence[Config] = ()) -> TuningResult:
+             seeds: Sequence[Config] = (),
+             ledger=None, timestamp: Optional[float] = None) -> TuningResult:
         """Search the space for the best configuration.
 
         ``backend`` schedules the evaluations (default
@@ -141,7 +142,12 @@ class Tuner:
         transfer-tuning warm-start configurations (e.g. a related
         benchmark's cached incumbents from ``TrialCache.suggest_seeds``);
         they are projected into the space and handed to the strategy,
-        which evaluates them first.
+        which evaluates them first. ``ledger`` is a
+        :class:`~repro.history.ledger.BoundLedger`: on completion the
+        run's incumbent (config, pooled moments, strategy, settings key)
+        is appended to the performance-history ledger, stamped with the
+        caller-supplied ``timestamp`` — the engine itself never reads a
+        clock for record content.
         """
         from .cache import settings_key
 
@@ -217,7 +223,7 @@ class Tuner:
                                persist=persist)
         best_cfg, best_score = cell.snapshot()
         trials = tuple(records)
-        return TuningResult(
+        result = TuningResult(
             best_config=best_cfg,
             best_score=best_score,
             trials=trials,
@@ -236,6 +242,11 @@ class Tuner:
             batches=stats.batches,
             n_seeded=len(projected),
         )
+        if ledger is not None:
+            # duck-typed BoundLedger so core never imports repro.history
+            ledger.record(result, settings_key=session_key,
+                          timestamp=timestamp, direction=direction)
+        return result
 
     def _project_seeds(self, seeds: Sequence[Config]) -> tuple[Config, ...]:
         """Map transfer seeds into this space (nearest in-space config),

@@ -176,3 +176,87 @@ def test_config_key_canonical():
     assert config_key({"a": 1, "b": 2}) == config_key({"b": 2, "a": 1})
     assert config_key({"a": 1}) != config_key({"a": 2})
     assert json.loads(config_key({"a": 1, "b": 2})) == {"a": 1, "b": 2}
+
+
+# ---------------------------------------------------------------------------
+# Transfer-seed ranking: Spearman correlation across donor fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_spearman_basics():
+    from repro.core import spearman
+    assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    # monotone transform leaves ranks (and rho) unchanged
+    assert spearman([1, 2, 3, 4], [1, 8, 27, 64]) == pytest.approx(1.0)
+    # ties share average ranks
+    assert spearman([1, 1, 2], [1, 1, 2]) == pytest.approx(1.0)
+    # degenerate: too short, or one side constant
+    assert spearman([1], [2]) is None
+    assert spearman([1, 2, 3], [5, 5, 5]) is None
+    with pytest.raises(ValueError):
+        spearman([1, 2], [1])
+
+
+def _seed_cache(tmp_path):
+    """Own fingerprint 'fp' has 4 trials; donor 'agree' ranks the shared
+    configs the same way, donor 'disagree' ranks them inverted, donor
+    'sparse' overlaps on too few configs to correlate. File order makes
+    'sparse' the most recently written donor."""
+    path = tmp_path / "c.jsonl"
+    scores = {0: 10.0, 1: 20.0, 2: 30.0, 3: 40.0}
+    for fp, score_of in (
+            ("fp", lambda x, s: s),
+            ("agree", lambda x, s: 2 * s + 1),     # same ranking
+            ("disagree", lambda x, s: -s),         # inverted ranking
+    ):
+        c = TrialCache(path, fingerprint=fp)
+        for x, s in scores.items():
+            c.put("b", {"x": x}, make_result(score=score_of(x, s)))
+    sparse = TrialCache(path, fingerprint="sparse")
+    sparse.put("b", {"x": 0}, make_result(score=99.0))
+    sparse.put("b", {"x": 9}, make_result(score=98.0))
+    return path
+
+
+def test_rank_donors_orders_by_shared_config_correlation(tmp_path):
+    path = _seed_cache(tmp_path)
+    cache = TrialCache(path, fingerprint="fp")
+    ranked = cache.rank_donors("b")
+    assert [fp for fp, _ in ranked] == ["agree", "disagree", "sparse"]
+    assert ranked[0][1] == pytest.approx(1.0)
+    assert ranked[1][1] == pytest.approx(-1.0)
+    assert ranked[2][1] is None                    # overlap < 3: no rho
+
+
+def test_rank_donors_recency_fallback_without_own_trials(tmp_path):
+    """With no own trials nothing correlates: donors keep recency order,
+    most recently written first."""
+    path = _seed_cache(tmp_path)
+    cache = TrialCache(path, fingerprint="brand-new-machine")
+    ranked = cache.rank_donors("b")
+    assert [fp for fp, rho in ranked] == ["sparse", "disagree", "agree", "fp"]
+    assert all(rho is None for _, rho in ranked)
+
+
+def test_suggest_seeds_tops_up_from_correlated_donors(tmp_path):
+    path = _seed_cache(tmp_path)
+    cache = TrialCache(path, fingerprint="fp")
+    # own best fill first; the correlated donor's foreign config ({"x": 9}
+    # isn't there, but 'agree' has none unseen) — ask for more than own 4
+    seeds = cache.suggest_seeds("b", limit=6)
+    assert seeds[:4] == [{"x": 3}, {"x": 2}, {"x": 1}, {"x": 0}]
+    # donors contribute only configs the own pool didn't already supply:
+    # 'sparse' brings {"x": 9}
+    assert {"x": 9} in seeds
+    # explicit foreign fingerprint: unchanged single-donor semantics
+    assert cache.suggest_seeds("b", fingerprint="disagree", limit=2) == \
+        [{"x": 0}, {"x": 1}]
+
+
+def test_suggest_seeds_without_own_pool_uses_recency_ranked_donors(tmp_path):
+    path = _seed_cache(tmp_path)
+    cache = TrialCache(path, fingerprint="brand-new-machine")
+    seeds = cache.suggest_seeds("b", limit=2)
+    # most recent donor is 'sparse': its best configs lead
+    assert seeds == [{"x": 0}, {"x": 9}]

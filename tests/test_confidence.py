@@ -5,8 +5,11 @@ import math
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-st = pytest.importorskip("hypothesis.strategies")
+try:            # only the property-based test needs hypothesis
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:             # pragma: no cover - env-dependent
+    hypothesis = st = None
 
 import repro.core.welford as W
 from repro.core import confidence as C
@@ -27,11 +30,15 @@ def test_t_quantile_known_values():
     assert abs(C.t_quantile(0.975, 1e7) - 1.959964) < 1e-4
 
 
-@hypothesis.given(st.floats(0.01, 0.99), st.integers(2, 200))
-@hypothesis.settings(deadline=None, max_examples=100)
-def test_t_quantile_inverts_cdf(p, df):
-    t = C.t_quantile(p, df)
-    assert abs(C.t_cdf(t, df) - p) < 1e-7
+@pytest.mark.skipif(hypothesis is None, reason="needs hypothesis")
+def test_t_quantile_inverts_cdf():
+    @hypothesis.given(st.floats(0.01, 0.99), st.integers(2, 200))
+    @hypothesis.settings(deadline=None, max_examples=100)
+    def prop(p, df):
+        t = C.t_quantile(p, df)
+        assert abs(C.t_cdf(t, df) - p) < 1e-7
+
+    prop()
 
 
 def test_ci_mean_coverage(rng):
@@ -79,3 +86,59 @@ def test_sign_test_median_ci(rng):
     interval = C.sign_test_median_ci(xs, confidence=0.99)
     assert interval.lo <= 2.0 <= interval.hi
     assert interval.lo > -math.inf
+
+
+# ---------------------------------------------------------------------------
+# Under-exercised paths: reservoir past capacity, robust-stat edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_bootstrap_past_capacity_stays_bounded(rng):
+    """Once the stream exceeds capacity the reservoir must stay a bounded,
+    uniform subsample — count keeps growing, the buffer does not, and the
+    CI neither collapses nor drifts off the true mean."""
+    boot = C.ReservoirBootstrap(capacity=32, resamples=200, seed=3)
+    for x in rng.normal(5.0, 0.5, size=10_000):
+        boot.update(float(x))
+    assert boot.count == 10_000
+    assert len(boot._buf) == 32
+    interval = boot.ci_mean(0.99)
+    assert interval.lo <= 5.0 <= interval.hi
+    # a 32-sample reservoir cannot pretend to 10k-sample precision
+    assert interval.hi - interval.lo > 0.01
+
+
+def test_reservoir_bootstrap_small_stream_degenerate():
+    boot = C.ReservoirBootstrap(capacity=8, resamples=50, seed=0)
+    assert boot.ci_mean().lo == -math.inf          # empty: infinite CI
+    boot.update(7.0)
+    interval = boot.ci_mean()                      # one sample: still infinite
+    assert interval.lo == -math.inf and interval.mean == 7.0
+    boot.update(9.0)
+    assert boot.ci_mean().lo > -math.inf           # two samples: finite
+
+
+def test_median_of_means_edge_cases():
+    with pytest.raises(ValueError):
+        C.median_of_means([])
+    assert C.median_of_means([4.0]) == 4.0         # one sample, one block
+    # more blocks than samples: k clamps to n, result is the median
+    assert C.median_of_means([1.0, 2.0, 3.0], n_blocks=100) == 2.0
+    assert C.median_of_means([5.0] * 16) == 5.0    # all-equal: exact
+
+
+def test_sign_test_median_ci_small_n_is_uninformative():
+    """Below n=8 no pair of order statistics covers 99%: the CI must
+    degrade to infinite honestly, never to a false finite interval."""
+    for n in (2, 3, 4):
+        interval = C.sign_test_median_ci([float(i) for i in range(n)],
+                                         confidence=0.99)
+        assert interval.lo == -math.inf and interval.hi == math.inf
+    single = C.sign_test_median_ci([3.0])
+    assert single.mean == 3.0 and single.lo == -math.inf
+    assert C.sign_test_median_ci([]).mean == 0.0
+
+
+def test_sign_test_median_ci_all_equal_samples():
+    interval = C.sign_test_median_ci([2.5] * 40, confidence=0.99)
+    assert interval.lo == interval.hi == interval.mean == 2.5

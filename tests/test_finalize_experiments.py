@@ -1,0 +1,89 @@
+"""scripts/finalize_experiments.py: marker validation, --check/--in-place."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+DOC_WITH_MARKERS = """# Experiments
+
+## Dry-run
+
+<!-- DRYRUN_TABLE -->
+
+## Roofline
+
+<!-- ROOFLINE_TABLE -->
+"""
+
+RECORD = {"arch": "gemma-2b", "shape": "train_4k", "mesh": "single",
+          "status": "ok", "compile_s": 1.5, "peak_gb": 2.0, "args_gb": 1.0,
+          "compute_ms": 10.0, "memory_ms": 5.0, "collective_ms": 1.0,
+          "dominant": "compute", "useful_flops_ratio": 0.5,
+          "mfu_bound": 0.4, "collectives": "all-reduce"}
+
+
+def _run(cwd, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "finalize_experiments.py"),
+         *map(str, argv)],
+        capture_output=True, text=True, env=env, cwd=cwd, timeout=120)
+
+
+def _write_inputs(tmp_path, doc_text=DOC_WITH_MARKERS):
+    (tmp_path / "EXPERIMENTS.md").write_text(doc_text)
+    rec = tmp_path / "r.jsonl"
+    rec.write_text(json.dumps(RECORD) + "\n")
+    return rec
+
+
+def test_default_prints_finalized_doc_without_writing(tmp_path):
+    rec = _write_inputs(tmp_path)
+    proc = _run(tmp_path, rec)
+    assert proc.returncode == 0, proc.stderr
+    assert "cells: 1 ok" in proc.stdout
+    assert "gemma-2b" in proc.stdout
+    # stdout mode must leave the document untouched
+    assert "<!-- DRYRUN_TABLE -->" in (tmp_path / "EXPERIMENTS.md").read_text()
+
+
+def test_in_place_rewrites_document(tmp_path):
+    rec = _write_inputs(tmp_path)
+    proc = _run(tmp_path, rec, "--in-place")
+    assert proc.returncode == 0, proc.stderr
+    text = (tmp_path / "EXPERIMENTS.md").read_text()
+    assert "<!-- DRYRUN_TABLE -->" not in text       # marker replaced
+    assert "gemma-2b" in text
+    assert "#### Multi-pod (512 chips)" in text
+
+
+def test_missing_markers_fail_loudly(tmp_path):
+    rec = _write_inputs(tmp_path, doc_text="# Experiments\n\nno markers\n")
+    proc = _run(tmp_path, rec, "--in-place")
+    assert proc.returncode == 1
+    assert "DRYRUN_TABLE" in proc.stderr and "ROOFLINE_TABLE" in proc.stderr
+    # and nothing was written
+    assert (tmp_path / "EXPERIMENTS.md").read_text().endswith("no markers\n")
+
+
+def test_check_mode_needs_no_records(tmp_path):
+    _write_inputs(tmp_path)
+    proc = _run(tmp_path, "--check")
+    assert proc.returncode == 0, proc.stderr
+    assert "markers present" in proc.stdout
+    (tmp_path / "EXPERIMENTS.md").write_text("# empty\n")
+    assert _run(tmp_path, "--check").returncode == 1
+
+
+def test_usage_errors(tmp_path):
+    proc = _run(tmp_path)                         # no document at all
+    assert proc.returncode == 2
+    _write_inputs(tmp_path)
+    assert _run(tmp_path).returncode == 2         # markers ok, no records
+    assert _run(tmp_path, "missing.jsonl").returncode == 2

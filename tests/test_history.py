@@ -1,0 +1,501 @@
+"""Performance-history subsystem: run ledger, regression gating, rendering.
+
+Covers the acceptance flow end to end: two synthetic tuning sessions on
+one fingerprint populate the ledger, an injected slowdown makes
+``scripts/perf_gate.py`` exit non-zero with a CI-backed verdict while a
+flat rerun passes, and the HTML renderer matches a golden snapshot
+(regenerate intentionally-changed goldens with ``REGEN_GOLDEN=1``).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (EvaluationSettings, Direction, TrialCache, Tuner,
+                        TuningSession, grid, welford)
+from repro.core.cache import iter_trials
+from repro.core.confidence import ci_mean
+from repro.core.evaluator import EvalResult, InvocationResult
+from repro.core.welford import WelfordState
+from repro.history import (RunLedger, ascii_sparkline, compare_runs,
+                           detect_regressions, render_html,
+                           render_trend_text, welch_interval)
+from repro.history.ledger import RunRecord, iter_runs, record_from_result
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+SETTINGS = EvaluationSettings(max_invocations=2, max_iterations=10,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+
+def quadratic_benchmark(cfg):
+    mu = 100.0 - (cfg["x"] - 5) ** 2
+    return lambda: (lambda: mu)
+
+
+def slow_quadratic_benchmark(cfg):
+    """The same objective after an injected 10% slowdown."""
+    mu = 90.0 - (cfg["x"] - 5) ** 2
+    return lambda: (lambda: mu)
+
+
+def make_record(score, offsets=(0.5, 0.7, 0.4, 0.6, 0.5), run=0,
+                benchmark="dgemm", fingerprint="fp", **kw):
+    """RunRecord whose moments come from real sample streams: one
+    3-sample invocation per offset, each with mean exactly ``score``."""
+    states = [welford.from_samples([score - o, score + o, score])
+              for o in offsets]
+    pooled = welford.tree_merge(states)
+    return RunRecord(benchmark=benchmark, fingerprint=fingerprint, run=run,
+                     config={"n": 512}, score=score,
+                     count=float(pooled.count), mean=float(pooled.mean),
+                     m2=float(pooled.m2),
+                     invocation_means=tuple(float(s.mean) for s in states),
+                     **kw)
+
+
+# ---------------------------------------------------------------------------
+# Ledger mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_append_assigns_monotone_run_index_per_series(tmp_path):
+    led = RunLedger(tmp_path / "history.jsonl")
+    a0 = led.append(make_record(100.0, run=99))          # caller run ignored
+    b0 = led.append(make_record(50.0, benchmark="triad"))
+    a1 = led.append(make_record(101.0))
+    assert (a0.run, a1.run, b0.run) == (0, 1, 0)
+    assert [r.run for r in led.series("dgemm", "fp")] == [0, 1]
+    # reload continues the numbering
+    led2 = RunLedger(tmp_path / "history.jsonl")
+    assert led2.append(make_record(102.0)).run == 2
+    assert len(led2) == 4
+
+
+def test_record_roundtrip_is_exact(tmp_path):
+    led = RunLedger(tmp_path / "history.jsonl")
+    rec = led.append(make_record(123.456, strategy="exhaustive",
+                                 settings_key="abc", session="nightly",
+                                 timestamp=1700000000.25))
+    got = RunLedger(tmp_path / "history.jsonl").series("dgemm", "fp")[0]
+    assert got == rec                                   # floats bit-exact
+    assert ci_mean(got.state, 0.99) == ci_mean(rec.state, 0.99)
+
+
+def test_torn_trailing_line_tolerated(tmp_path):
+    path = tmp_path / "history.jsonl"
+    led = RunLedger(path)
+    led.append(make_record(100.0))
+    with open(path, "a") as f:
+        f.write('{"ledger_version": 1, "benchmark": "dg')   # killed mid-write
+    assert len(RunLedger(path)) == 1
+
+
+def test_ledger_and_cache_files_skip_each_other(tmp_path):
+    """A ledger next to session caches must not confuse cache readers,
+    and vice versa — the two record schemas are mutually invisible."""
+    cache = TrialCache(tmp_path / "trials.jsonl", fingerprint="fp")
+    st = welford.from_samples([1.0, 2.0, 3.0])
+    inv = InvocationResult(mean=float(st.mean), count=int(st.count),
+                           elapsed_s=0.1, stop_reason="x", pruned=False,
+                           m2=float(st.m2))
+    cache.put("b", {"x": 1}, EvalResult(
+        score=2.0, best_invocation=2.0, invocations=(inv,), total_samples=3,
+        total_time_s=0.1, measured_time_s=0.1, pruned=False,
+        stop_reason="x"))
+    led = RunLedger(tmp_path / "history.jsonl")
+    led.append(make_record(100.0))
+    assert list(iter_runs(tmp_path / "trials.jsonl")) == []
+    assert list(iter_trials(tmp_path / "history.jsonl")) == []
+    # TrialCache load counts the foreign schema as stale, not a crash
+    assert len(TrialCache(tmp_path / "history.jsonl", fingerprint="fp")) == 0
+
+
+def test_record_from_result_pools_incumbent_moments():
+    result = Tuner(grid(x=tuple(range(8))), SETTINGS).tune(
+        quadratic_benchmark)
+    rec = record_from_result("bench", "fp", result, settings_key="sk",
+                             session="s1")
+    assert rec.config == result.best_config
+    assert rec.score == result.best_score
+    assert rec.mean == pytest.approx(result.best_score)
+    assert rec.n_trials == len(result.trials)
+    assert rec.strategy == "exhaustive"
+    assert rec.settings_key == "sk"
+    assert rec.timestamp is None          # core never reads a clock
+    winner = next(t for t in result.trials
+                  if t.config == result.best_config)
+    assert rec.count == sum(i.count for i in winner.result.invocations)
+
+
+def test_tuning_session_auto_records_runs(tmp_path):
+    """Two sessions on one fingerprint -> two ledger runs, resumed run
+    included (acceptance criterion part 1)."""
+    def session():
+        return TuningSession("s", Tuner(grid(x=tuple(range(8))), SETTINGS),
+                             quadratic_benchmark, cache_dir=tmp_path,
+                             fingerprint="fp", benchmark_name="bench")
+
+    session().run(timestamp=100.0)
+    session().run(timestamp=200.0)        # fully cache-served rerun
+    led = RunLedger(tmp_path / "history.jsonl")
+    runs = led.series("bench", "fp")
+    assert [r.run for r in runs] == [0, 1]
+    assert [r.timestamp for r in runs] == [100.0, 200.0]
+    assert all(r.session == "s" and r.config == {"x": 5} for r in runs)
+
+
+def test_tuning_session_ledger_opt_out(tmp_path):
+    TuningSession("s", Tuner(grid(x=(1, 2)), SETTINGS), quadratic_benchmark,
+                  cache_dir=tmp_path, fingerprint="fp",
+                  ledger=None).run()
+    assert not (tmp_path / "history.jsonl").exists()
+
+
+def test_append_sees_other_writers_on_disk(tmp_path):
+    """Two ledger handles on one file (e.g. two processes) must not hand
+    out the same run index from stale in-memory snapshots."""
+    path = tmp_path / "history.jsonl"
+    a, b = RunLedger(path), RunLedger(path)      # both snapshot empty
+    assert a.append(make_record(100.0)).run == 0
+    assert b.append(make_record(101.0)).run == 1   # disk re-read, not 0
+    assert a.append(make_record(102.0)).run == 2
+    assert [r.run for r in RunLedger(path).series("dgemm", "fp")] == [0, 1, 2]
+
+
+def test_backfill_respects_direction(tmp_path):
+    """A minimize-direction archive (e.g. wall-time scores) must backfill
+    its *lowest*-scoring trial as the incumbent, stamped minimize."""
+    cache = TrialCache(tmp_path / "s.jsonl", fingerprint="fp")
+    settings = EvaluationSettings(max_invocations=2, max_iterations=10,
+                                  direction=Direction.MINIMIZE,
+                                  use_ci_convergence=True)
+    Tuner(grid(x=tuple(range(4))), settings).tune(
+        lambda cfg: (lambda: (lambda: 10.0 + cfg["x"])),
+        cache=cache.bound("lat"))
+    led = RunLedger(tmp_path / "h.jsonl")
+    (rec,) = led.backfill(cache, direction=Direction.MINIMIZE)
+    assert rec.config == {"x": 0}
+    assert rec.score == 10.0
+    assert rec.direction == "minimize"
+
+
+def test_backfill_from_cache_is_idempotent(tmp_path):
+    cache = TrialCache(tmp_path / "s.jsonl", fingerprint="fp")
+    Tuner(grid(x=tuple(range(8))), SETTINGS).tune(
+        quadratic_benchmark, cache=cache.bound("bench"))
+    led = RunLedger(tmp_path / "history.jsonl")
+    added = led.backfill(cache)
+    assert [r.key for r in added] == [("bench", "fp")]
+    assert added[0].config == {"x": 5}
+    assert added[0].score == 100.0
+    assert led.backfill(cache) == []              # second backfill: no-op
+    assert led.backfill(tmp_path / "s.jsonl") == []   # path form, same data
+    assert len(led) == 1
+
+
+# ---------------------------------------------------------------------------
+# Regression statistics
+# ---------------------------------------------------------------------------
+
+
+def test_welch_interval_known_value():
+    # n=10, mean=100, s^2=4  vs  n=12, mean=103, s^2=9
+    a = WelfordState(count=10.0, mean=100.0, m2=4.0 * 9)
+    b = WelfordState(count=12.0, mean=103.0, m2=9.0 * 11)
+    iv = welch_interval(a, b, confidence=0.99)
+    assert iv.mean == pytest.approx(3.0)
+    # Welch df ~= 19.2, t_.995 ~= 2.858, half-width ~= 3.065
+    assert iv.lo == pytest.approx(3.0 - 3.065, abs=0.01)
+    assert iv.hi == pytest.approx(3.0 + 3.065, abs=0.01)
+
+
+def test_welch_interval_degenerate_inputs():
+    tight = WelfordState(count=10.0, mean=5.0, m2=0.0)
+    tiny = WelfordState(count=1.0, mean=4.0, m2=0.0)
+    assert welch_interval(tight, tiny).lo == -float("inf")
+    iv = welch_interval(tight, WelfordState(count=10.0, mean=4.0, m2=0.0))
+    assert (iv.lo, iv.hi) == (-1.0, -1.0)         # zero variance: exact delta
+
+
+def test_compare_runs_verdicts():
+    base = make_record(100.0)
+    assert compare_runs(base, make_record(90.0, run=1)).verdict == "regressed"
+    assert compare_runs(base, make_record(110.0, run=1)).verdict == "improved"
+    assert compare_runs(base, make_record(100.1, run=1)).verdict == "flat"
+    # significant but tiny drift: suppressed by the 2% effect floor
+    narrow = make_record(99.0, offsets=(0.01,) * 8, run=1)
+    base_n = make_record(100.0, offsets=(0.01,) * 8)
+    assert compare_runs(base_n, narrow).verdict == "flat"
+    assert compare_runs(base_n, narrow, min_effect=0.001).verdict == \
+        "regressed"
+
+
+def test_compare_runs_direction_aware():
+    base = make_record(100.0, direction=Direction.MINIMIZE.value)
+    worse = make_record(110.0, run=1, direction=Direction.MINIMIZE.value)
+    assert compare_runs(base, worse).verdict == "regressed"
+    assert compare_runs(base, worse,
+                        direction=Direction.MAXIMIZE).verdict == "improved"
+
+
+def _tiny_record(score, run=0):
+    """Two 2-sample invocations: 4 pooled samples (< the Welch floor of
+    5) but two invocation means for the bootstrap to resample."""
+    states = [welford.from_samples([score - o, score + o])
+              for o in (0.4, 0.6)]
+    pooled = welford.tree_merge(states)
+    return RunRecord(benchmark="dgemm", fingerprint="fp", run=run,
+                     config={"n": 512}, score=score,
+                     count=float(pooled.count), mean=float(pooled.mean),
+                     m2=float(pooled.m2),
+                     invocation_means=tuple(float(s.mean) for s in states))
+
+
+def test_compare_runs_bootstrap_fallback_low_n():
+    """Runs pooling fewer than min_count samples route through the
+    reservoir bootstrap over the stored invocation means."""
+    cmp = compare_runs(_tiny_record(100.0), _tiny_record(80.0, run=1))
+    assert cmp.method == "bootstrap"
+    assert cmp.verdict == "regressed"
+    flat = compare_runs(_tiny_record(100.0), _tiny_record(100.0, run=1))
+    assert flat.method == "bootstrap"
+    assert flat.verdict == "flat"
+    # without stored invocation means there is nothing to resample: welch
+    bare = RunRecord(benchmark="d", fingerprint="fp", run=0, config={},
+                     score=100.0, count=3.0, mean=100.0, m2=0.5)
+    assert compare_runs(bare, bare).method == "welch"
+
+
+def test_detect_regressions_baseline_is_best_historical(tmp_path):
+    """A slow decay can't hide: run N gates against the series' high-water
+    mark, not against run N-1."""
+    led = RunLedger(tmp_path / "h.jsonl")
+    for score in (100.0, 99.0, 98.0, 97.0):       # each step < 2%
+        led.append(make_record(score))
+    report = detect_regressions(led)
+    (series,) = report.series
+    assert series.comparison.baseline.run == 0    # not run 2
+    assert series.verdict == "regressed"          # 3% vs best, confirmed
+    assert not report.ok
+
+
+def test_detect_regressions_single_run_is_baseline(tmp_path):
+    led = RunLedger(tmp_path / "h.jsonl")
+    led.append(make_record(100.0))
+    report = detect_regressions(led)
+    assert report.series[0].verdict == "baseline"
+    assert report.ok
+    assert "baseline" in report.render_text()
+
+
+def test_detect_regressions_filters(tmp_path):
+    led = RunLedger(tmp_path / "h.jsonl")
+    led.append(make_record(100.0))
+    led.append(make_record(50.0, benchmark="triad"))
+    led.append(make_record(40.0, benchmark="triad", run=1))
+    report = detect_regressions(led, benchmark="dgemm")
+    assert [s.benchmark for s in report.series] == ["dgemm"]
+    assert detect_regressions(led, fingerprint="other").series == ()
+
+
+# ---------------------------------------------------------------------------
+# Rendering: sparklines, trend text, HTML golden
+# ---------------------------------------------------------------------------
+
+
+def test_ascii_sparkline():
+    assert ascii_sparkline([]) == ""
+    assert ascii_sparkline([5.0, 5.0, 5.0]) == "▄▄▄"
+    spark = ascii_sparkline([0, 1, 2, 3, 4, 5, 6, 7])
+    assert spark == "▁▂▃▄▅▆▇█"
+    assert ascii_sparkline([1.0, 0.0]) == "█▁"
+
+
+def test_render_trend_text():
+    runs = [make_record(100.0, run=0, strategy="exhaustive", session="s"),
+            make_record(90.0, run=1)]
+    text = render_trend_text(runs)
+    assert "2 run(s)" in text
+    assert "via exhaustive" in text and "[s]" in text
+    assert render_trend_text([]) == "(no history yet)"
+
+
+def _assert_matches_golden(name, text):
+    golden = GOLDEN_DIR / name
+    if os.environ.get("REGEN_GOLDEN"):
+        golden.parent.mkdir(parents=True, exist_ok=True)
+        golden.write_text(text, encoding="utf-8")
+        pytest.skip(f"regenerated {golden}")
+    assert golden.exists(), \
+        f"missing golden file {golden}; run with REGEN_GOLDEN=1"
+    assert text == golden.read_text(encoding="utf-8"), \
+        f"{name} drifted from golden; REGEN_GOLDEN=1 if intentional"
+
+
+def _make_eval_result(score, spreads=(1.0, 2.0)):
+    invs, samples = [], 0
+    for off in spreads:
+        st = welford.from_samples([score - off, score + off])
+        samples += int(st.count)
+        invs.append(InvocationResult(mean=float(st.mean), count=int(st.count),
+                                     elapsed_s=0.125, pruned=False,
+                                     stop_reason="max_count(2)",
+                                     m2=float(st.m2)))
+    return EvalResult(score=score, best_invocation=score,
+                      invocations=tuple(invs), total_samples=samples,
+                      total_time_s=0.25, measured_time_s=0.25,
+                      pruned=False, stop_reason="max_count(2)")
+
+
+def _dashboard_inputs(tmp_path):
+    from repro.core import build_reports
+    from repro.core.cache import CachedTrial
+    trials = [
+        CachedTrial("dgemm", "fpA", {"n": 512, "m": 512, "k": 128},
+                    _make_eval_result(120.0)),
+        CachedTrial("triad", "fpA", {"n_bytes": 1 << 22},
+                    _make_eval_result(40.0)),
+        CachedTrial("triad", "fpA", {"n_bytes": 1 << 28},
+                    _make_eval_result(10.0)),
+    ]
+    reports, skipped = build_reports(trials)
+    led = RunLedger(tmp_path / "h.jsonl")
+    led.append(make_record(118.0, fingerprint="fpA", strategy="exhaustive",
+                           session="nightly", timestamp=1700000000.0))
+    led.append(make_record(120.0, fingerprint="fpA", strategy="exhaustive",
+                           session="nightly", timestamp=1700086400.0))
+    led.append(make_record(112.0, fingerprint="fpA", strategy="random",
+                           session="nightly", timestamp=1700172800.0))
+    return reports, skipped, led
+
+
+def test_html_dashboard_matches_golden(tmp_path):
+    reports, skipped, led = _dashboard_inputs(tmp_path)
+    regression = detect_regressions(led)
+    html = render_html(reports, skipped, ledger=led, regression=regression,
+                       subtitle="golden fixture")
+    # structural sanity before byte-compare
+    for needle in ("<!DOCTYPE html>", "<style>", "<script>",
+                   "Regression verdicts", "verdict-regressed",
+                   "Roofline — <code>fpA</code>",
+                   "Trend — dgemm @ <code>fpA</code>",
+                   "<svg", "trend-band", "roof-curve",
+                   "2023-11-14 22:13 UTC"):
+        assert needle in html, needle
+    assert "http://" not in html and "https://" not in html  # self-contained
+    _assert_matches_golden("dashboard.html", html)
+
+
+def test_render_html_empty_inputs():
+    html = render_html()
+    assert "Nothing to render" in html
+    assert "<!DOCTYPE html>" in html
+
+
+def test_render_html_single_run_series(tmp_path):
+    """One-point trend series must not divide by zero in the SVG scaler."""
+    led = RunLedger(tmp_path / "h.jsonl")
+    led.append(make_record(100.0))
+    html = render_html(ledger=led, regression=detect_regressions(led))
+    assert "verdict-baseline" in html and "<svg" in html
+
+
+# ---------------------------------------------------------------------------
+# CLIs: perf_gate end-to-end acceptance + report --html
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(script, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / script), *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=120)
+
+
+@pytest.mark.slow
+def test_perf_gate_end_to_end(tmp_path):
+    """The acceptance flow: two synthetic sessions -> flat gate passes;
+    an injected slowdown -> gate exits non-zero with a CI-backed verdict."""
+    def run_session(name, benchmark):
+        TuningSession(name, Tuner(grid(x=tuple(range(8))), SETTINGS),
+                      benchmark, cache_dir=tmp_path, fingerprint="fp",
+                      benchmark_name="bench").run()
+
+    ledger_path = tmp_path / "history.jsonl"
+    run_session("s1", quadratic_benchmark)
+    run_session("s2", quadratic_benchmark)        # flat rerun
+    assert len(RunLedger(ledger_path).series("bench", "fp")) == 2
+    proc = _run_cli("perf_gate.py", ledger_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "flat" in proc.stdout
+
+    run_session("s3", slow_quadratic_benchmark)   # injected 10% slowdown
+    proc = _run_cli("perf_gate.py", ledger_path)
+    assert proc.returncode == 1
+    assert "REGRESSED" in proc.stdout
+    assert "CI [" in proc.stdout                  # verdict is CI-backed
+    # dry-run reports the same verdict without failing the build
+    proc = _run_cli("perf_gate.py", ledger_path, "--dry-run")
+    assert proc.returncode == 0
+    assert "REGRESSED" in proc.stdout
+
+
+def test_perf_gate_missing_ledger(tmp_path):
+    assert _run_cli("perf_gate.py", tmp_path / "no.jsonl").returncode == 2
+    proc = _run_cli("perf_gate.py", tmp_path / "no.jsonl", "--dry-run")
+    assert proc.returncode == 0
+
+
+@pytest.mark.slow
+def test_roofline_report_html_cli(tmp_path):
+    reports, _, led = _dashboard_inputs(tmp_path)
+    cache = tmp_path / "nightly.jsonl"
+    from repro.core.cache import TrialCache as TC
+    for t in [("dgemm", {"n": 512, "m": 512, "k": 128}, 120.0),
+              ("triad", {"n_bytes": 1 << 22}, 40.0),
+              ("triad", {"n_bytes": 1 << 28}, 10.0)]:
+        TC(cache, fingerprint="fpA").put(t[0], t[1], _make_eval_result(t[2]))
+    out = tmp_path / "dash.html"
+    proc = _run_cli("roofline_report.py", cache, "--html", out,
+                    "--history", tmp_path / "h.jsonl")
+    assert proc.returncode == 0, proc.stderr
+    html = out.read_text()
+    assert "Regression verdicts" in html
+    assert "Trend — dgemm" in html
+    # missing ledger is a usage error
+    proc = _run_cli("roofline_report.py", cache, "--html", out,
+                    "--history", tmp_path / "missing.jsonl")
+    assert proc.returncode == 2
+
+
+@pytest.mark.slow
+def test_roofline_report_ledger_only_still_writes_requested_files(tmp_path):
+    """With no roofline-complete fingerprint but --html/--history given,
+    every explicitly requested artifact (--out, --csv) is still written —
+    a 0 exit must never leave a requested file missing."""
+    from repro.core.cache import TrialCache as TC
+    cache = tmp_path / "synthetic-only.jsonl"
+    TC(cache, fingerprint="fpA").put("synthetic", {"x": 5},
+                                     _make_eval_result(100.0))
+    led = RunLedger(tmp_path / "h.jsonl")
+    led.append(make_record(100.0, benchmark="synthetic", fingerprint="fpA"))
+    out_md, out_csv = tmp_path / "r.md", tmp_path / "r.csv"
+    out_html = tmp_path / "dash.html"
+    proc = _run_cli("roofline_report.py", cache, "--out", out_md,
+                    "--csv", out_csv, "--html", out_html,
+                    "--history", tmp_path / "h.jsonl")
+    assert proc.returncode == 0, proc.stderr
+    assert "no reportable fingerprint" in proc.stderr
+    assert out_md.exists() and out_csv.exists()
+    assert "Trend — synthetic" in out_html.read_text()
+    # without the ledger escape hatch the same cache still refuses
+    proc = _run_cli("roofline_report.py", cache, "--out", out_md)
+    assert proc.returncode == 1
