@@ -27,6 +27,7 @@ from repro.core import (NeighborhoodStrategy, ProcessPoolBackend,
                         RandomSearchStrategy, SimulatedShardedBackend,
                         SuccessiveHalvingStrategy, ThreadPoolBackend,
                         TrialCache, Tuner)
+from repro.surrogate import BanditStrategy, SurrogateStrategy
 
 from .common import dgemm_benchmark, dgemm_space, emit, paper_settings, print_table
 
@@ -93,11 +94,16 @@ def run_strategies(space, settings, quick: bool = True,
                    exhaustive=None) -> list[dict]:
     """Strategy comparison through the shared engine (serial backend, so
     trial/sample counts are scheduling-independent). The exhaustive row
-    reuses the backend table's serial run when available."""
+    reuses the backend table's serial run when available. The
+    model-guided rows (surrogate, bandit) run at the same proposal budget
+    as random search, so the table directly shows what the learned
+    proposal order buys over blind sampling."""
     budget = max(4, space.cardinality // 3)
     strategies = [("halving", SuccessiveHalvingStrategy()),
                   ("random", RandomSearchStrategy(budget=budget, seed=0)),
-                  ("neighborhood", NeighborhoodStrategy(budget=budget))]
+                  ("neighborhood", NeighborhoodStrategy(budget=budget)),
+                  ("surrogate", SurrogateStrategy(budget=budget, seed=0)),
+                  ("bandit", BanditStrategy(budget=budget, seed=0))]
     rows = []
     if exhaustive is not None:
         rows.append(_strategy_row("exhaustive", exhaustive))

@@ -22,7 +22,9 @@ python scripts/check_docs.py
 
 echo "== perf gate (dry-run, non-blocking) =="
 # reports ledger drift without failing the build; flip off --dry-run in a
-# deployment with a persistent .tuning_sessions/history.jsonl to enforce
-python scripts/perf_gate.py --dry-run
+# deployment with a persistent .tuning_sessions/history.jsonl to enforce.
+# The ledger path is explicit so a cold runner (no .tuning_sessions/)
+# prints "nothing to gate" deterministically regardless of cwd defaults.
+python scripts/perf_gate.py --dry-run .tuning_sessions/history.jsonl
 
 echo "== ci.sh: all green =="

@@ -5,24 +5,31 @@
     PYTHONPATH=src python scripts/tune.py --session nightly-dgemm \
         --backend thread:8 --order reverse --full
     PYTHONPATH=src python scripts/tune.py --session adaptive \
-        --strategy neighborhood --budget 16 --transfer-from nightly-dgemm
+        --strategy surrogate --budget 16 --transfer-from nightly-dgemm
 
 Trials persist to ``<cache-dir>/<session>.jsonl`` keyed by (benchmark,
 config, hardware fingerprint); re-running the same session skips every
 completed config and warm-starts the incumbent from the best cached trial,
 so a killed run resumes exactly where it stopped. ``--fresh`` discards the
 session's cache first. ``--strategy`` picks the search policy (exhaustive,
-halving, random, neighborhood), ``--budget`` caps random/neighborhood
-proposals, and ``--transfer-from SESSION[:BENCHMARK]`` seeds the search
-with another session's cached incumbents (transfer tuning). Halving rung
-trials are persisted but never replayed on resume: they are measured
-under per-rung budgets, and records only satisfy cache reads made under
-the same evaluation settings.
+halving, random, neighborhood, or the model-guided surrogate/bandit —
+see docs/strategies.md), ``--budget`` caps random/neighborhood/surrogate/
+bandit proposals, ``--acquisition`` picks the surrogate's scoring rule,
+and ``--transfer-from SESSION[:BENCHMARK]`` seeds the search with another
+session's cached incumbents (transfer tuning). Halving rung trials are
+persisted but never replayed on resume: they are measured under per-rung
+budgets, and records only satisfy cache reads made under the same
+evaluation settings.
 
 Every completed run also appends its incumbent to the performance-history
 ledger (``<cache-dir>/history.jsonl``); ``--history`` prints the series'
 trend (sparkline + per-run CIs) and regression verdict afterwards — see
-``scripts/perf_gate.py`` and ``docs/history.md``.
+``scripts/perf_gate.py`` and ``docs/history.md``. ``--compact-history N``
+compacts that ledger (keep each series' best run plus its N most recent,
+drop older superseded runs); it also works standalone, without
+``--session``:
+
+    PYTHONPATH=src python scripts/tune.py --compact-history 20
 """
 
 from __future__ import annotations
@@ -44,7 +51,8 @@ from repro.core import (NeighborhoodStrategy, ProcessPoolBackend,  # noqa: E402
                         ThreadPoolBackend, TrialCache, Tuner, TuningSession,
                         hardware_fingerprint)
 
-STRATEGIES = ("exhaustive", "halving", "random", "neighborhood")
+STRATEGIES = ("exhaustive", "halving", "random", "neighborhood",
+              "surrogate", "bandit")
 
 
 def parse_backend(spec: str):
@@ -73,14 +81,37 @@ def make_strategy(args):
         return SuccessiveHalvingStrategy()
     if args.strategy == "random":
         return RandomSearchStrategy(budget=args.budget, seed=args.seed)
+    if args.strategy == "surrogate":
+        from repro.surrogate import SurrogateStrategy
+        return SurrogateStrategy(budget=args.budget, seed=args.seed,
+                                 acquisition=args.acquisition)
+    if args.strategy == "bandit":
+        from repro.surrogate import BanditStrategy
+        return BanditStrategy(budget=args.budget, seed=args.seed)
     return NeighborhoodStrategy(budget=args.budget)
+
+
+def compact_history(args) -> int:
+    """Apply ``RunLedger.compact`` to the cache dir's shared ledger."""
+    from repro.history import RunLedger
+    path = pathlib.Path(args.cache_dir) / "history.jsonl"
+    if not path.exists():
+        print(f"compact    : no ledger at {path} — nothing to do")
+        return 0
+    ledger = RunLedger(path)
+    n_before = len(ledger)
+    dropped = ledger.compact(keep_last=args.compact_history)
+    print(f"compact    : {path} — dropped {dropped} of {n_before} run(s), "
+          f"kept {len(ledger)}")
+    return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--session", required=True,
-                    help="session name; trials persist under this name")
+    ap.add_argument("--session", default=None,
+                    help="session name; trials persist under this name "
+                         "(required unless only --compact-history is asked)")
     ap.add_argument("--benchmark", default="dgemm",
                     choices=("dgemm", "triad", "synthetic"),
                     help="'synthetic' is an instant quadratic objective "
@@ -91,7 +122,12 @@ def main() -> int:
     ap.add_argument("--strategy", default="exhaustive", choices=STRATEGIES,
                     help="search strategy (see docs/strategies.md)")
     ap.add_argument("--budget", type=int, default=None,
-                    help="max proposals for --strategy random/neighborhood")
+                    help="max proposals for --strategy random/neighborhood/"
+                         "surrogate/bandit")
+    ap.add_argument("--acquisition", default="ei", choices=("ei", "ucb"),
+                    help="acquisition rule for --strategy surrogate: "
+                         "expected improvement against the incumbent's CI "
+                         "bound, or UCB at the settings' confidence level")
     ap.add_argument("--transfer-from", default=None, metavar="SESSION[:BENCH]",
                     help="seed the search with another session's cached "
                          "incumbents (default: same benchmark name)")
@@ -114,7 +150,18 @@ def main() -> int:
                     help="after tuning, print this series' run-ledger "
                          "trend (sparkline + per-run CIs) and its "
                          "regression verdict")
+    ap.add_argument("--compact-history", type=int, default=None, metavar="N",
+                    help="compact <cache-dir>/history.jsonl: keep each "
+                         "series' best run plus its N most recent, drop "
+                         "older superseded runs; runs after tuning, or "
+                         "standalone when --session is omitted")
     args = ap.parse_args()
+
+    if args.session is None:
+        if args.compact_history is None:
+            ap.error("--session is required (unless only compacting: "
+                     "--compact-history N)")
+        return compact_history(args)
 
     from benchmarks.common import (dgemm_benchmark, dgemm_space,
                                    paper_settings, synthetic_benchmark,
@@ -174,6 +221,8 @@ def main() -> int:
     print(f"fingerprint: {hardware_fingerprint()}")
     print(f"strategy   : {args.strategy}"
           + (f" (order={args.order})" if args.strategy == "exhaustive" else "")
+          + (f" (acquisition={args.acquisition})"
+             if args.strategy == "surrogate" else "")
           + (f" (budget={args.budget})" if args.budget is not None else ""))
     print(f"space      : {space!r}  ({space.cardinality} configs)")
     print(f"cached     : {len(session.cache)} trials "
@@ -229,6 +278,9 @@ def main() -> int:
                   "this session name).")
             for fp, reason in skipped:
                 print(f"[report]   {fp}: {reason}")
+
+    if args.compact_history is not None:
+        compact_history(args)
     return 0
 
 

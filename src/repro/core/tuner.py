@@ -267,7 +267,9 @@ class Tuner:
 
 def compare_techniques(space: SearchSpace, benchmark: BenchmarkFactory,
                        base: EvaluationSettings,
-                       techniques: Optional[dict[str, tuple[EvaluationSettings, str]]] = None,
+                       techniques: Optional[dict[str, tuple[
+                           EvaluationSettings,
+                           "str | SearchStrategy"]]] = None,
                        backend: Optional[ExecutionBackend] = None,
                        cache=None, warm_start: bool = False,
                        cache_prefix: str = "technique",
@@ -282,6 +284,12 @@ def compare_techniques(space: SearchSpace, benchmark: BenchmarkFactory,
     benchmark namespace (``<cache_prefix>:<label>``) so the grid is
     resumable without cross-technique contamination, and ``warm_start``
     seeds each technique's incumbent from its own cached best.
+
+    A technique row is ``(settings, order)`` where ``order`` is either a
+    visit-order string for the exhaustive strategy (the paper's rows) or
+    a :class:`~repro.core.strategy.SearchStrategy` instance — so the grid
+    can pit the paper's techniques against e.g. a model-guided
+    ``SurrogateStrategy`` row under identical evaluation settings.
     """
     if techniques is None:
         techniques = standard_techniques(base)
@@ -289,7 +297,9 @@ def compare_techniques(space: SearchSpace, benchmark: BenchmarkFactory,
     for label, (settings, order) in techniques.items():
         bound = cache.bound(f"{cache_prefix}:{label}") \
             if cache is not None else None
-        out[label] = Tuner(space, settings, order=order).tune(
+        tuner = Tuner(space, settings, order=order) if isinstance(order, str) \
+            else Tuner(space, settings, strategy=order)
+        out[label] = tuner.tune(
             benchmark, backend=backend, cache=bound, warm_start=warm_start)
     return out
 

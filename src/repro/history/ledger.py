@@ -28,6 +28,7 @@ On-disk format: ``docs/history.md``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -218,9 +219,7 @@ class RunLedger:
             fcntl = None
         with self._lock:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            with open(self.path, "a+", encoding="utf-8") as f:
-                if fcntl is not None:
-                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            with self._locked_file(fcntl) as f:
                 try:
                     runs = self._series.setdefault(record.key, [])
                     last = runs[-1].run if runs else -1
@@ -248,6 +247,114 @@ class RunLedger:
                         fcntl.flock(f.fileno(), fcntl.LOCK_UN)
             runs.append(record)
             return record
+
+    @contextlib.contextmanager
+    def _locked_file(self, fcntl):
+        """Open the ledger ``a+`` holding the exclusive advisory flock.
+
+        After acquiring the lock the inode is re-checked against the
+        path: a concurrent :meth:`compact` may have atomically replaced
+        the file between our ``open`` and ``flock``, and appending to the
+        orphaned inode would silently lose the record. Stale handles are
+        re-opened until the lock is held on the live file."""
+        while True:
+            f = open(self.path, "a+", encoding="utf-8")
+            if fcntl is None:            # pragma: no cover - non-POSIX
+                break
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            try:
+                if os.fstat(f.fileno()).st_ino == os.stat(self.path).st_ino:
+                    break
+            except OSError:
+                pass                     # path vanished mid-race: reopen
+            fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            f.close()
+        try:
+            yield f
+        finally:
+            f.close()
+
+    def compact(self, keep_last: int = 20) -> int:
+        """Drop superseded non-best runs past a per-series cap.
+
+        Multi-year deployments append one record per completed session
+        forever; most of those records are neither recent (trend
+        dashboards window them out) nor the series' best (the regression
+        baseline). For every (benchmark, fingerprint) series this keeps
+        the most recent ``keep_last`` runs **plus the best run ever**
+        (by each record's own recorded direction — the baseline
+        ``detect_regressions`` compares against must survive) and drops
+        the rest. Run indices are preserved, never renumbered, so a
+        later ``append`` continues the series where it left off and
+        trend x-axes stay stable across compactions. Foreign lines
+        (other ledger versions, torn writes) are preserved verbatim.
+
+        The rewrite is atomic under the same exclusive ``flock`` that
+        serializes :meth:`append`: the survivors are written to a temp
+        file in the ledger's directory, fsynced, and ``os.replace``d
+        over the ledger while the lock is held — a crash mid-compaction
+        leaves the original file intact, and a concurrent appender
+        re-checks its inode after locking so it never writes to the
+        orphaned file. Returns the number of run records dropped.
+        """
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        try:
+            import fcntl
+        except ImportError:              # pragma: no cover - non-POSIX
+            fcntl = None
+        with self._lock:
+            if not self.path.exists():
+                return 0
+            with self._locked_file(fcntl) as f:
+                f.seek(0)
+                lines = f.read().splitlines()
+                parsed: list[tuple[str, Optional[RunRecord]]] = []
+                series: dict[tuple[str, str], list[RunRecord]] = {}
+                for line in lines:
+                    if not line.strip():
+                        continue
+                    rec = None
+                    try:
+                        d = json.loads(line)
+                        if d.get("ledger_version") == LEDGER_VERSION:
+                            rec = _record_from_json(d)
+                    except (json.JSONDecodeError, KeyError, TypeError,
+                            ValueError):
+                        rec = None       # foreign/torn: preserved verbatim
+                    parsed.append((line, rec))
+                    if rec is not None:
+                        series.setdefault(rec.key, []).append(rec)
+                keep: set[int] = set()
+                for runs in series.values():
+                    runs.sort(key=lambda r: r.run)
+                    best = runs[0]
+                    for r in runs[1:]:
+                        direction = Direction(r.direction)
+                        if direction.better(r.score, best.score):
+                            best = r
+                    chosen = {id(r) for r in runs[-keep_last:]}
+                    chosen.add(id(best))
+                    keep.update(chosen)
+                survivors = [(line, rec) for line, rec in parsed
+                             if rec is None or id(rec) in keep]
+                dropped = len(parsed) - len(survivors)
+                if dropped:
+                    tmp = self.path.with_name(self.path.name + ".compact")
+                    with open(tmp, "w", encoding="utf-8") as out:
+                        out.write("".join(line + "\n"
+                                          for line, _ in survivors))
+                        out.flush()
+                        os.fsync(out.fileno())
+                    os.replace(tmp, self.path)
+                self._series = {
+                    key: sorted((r for r in runs
+                                 if id(r) in keep), key=lambda r: r.run)
+                    for key, runs in series.items()}
+                self._series = {k: v for k, v in self._series.items() if v}
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            return dropped
 
     def record_result(self, benchmark: str, fingerprint: str, result,
                       settings_key: Optional[str] = None,

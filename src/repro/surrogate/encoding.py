@@ -1,0 +1,90 @@
+"""Config → feature-vector encoding for model-guided search.
+
+Surrogate models need numeric inputs; :class:`~repro.core.searchspace.Param`
+domains are ordered but arbitrary (powers of two, the paper's 500-doubling
+leading dimensions, or categorical flags). The encoding deliberately uses
+the *level index* within each parameter's ordered domain, not the raw
+value: the paper's spaces are geometric ladders (Sec. IV-A), so raw values
+would compress the small end of every ladder into a corner of feature
+space, while level indices spread the paper's 4×4×6 reduced DGEMM grid
+uniformly. Parameters whose domain is non-numeric get a one-hot block
+instead — there is no meaningful order-distance between ``"nmk"`` and
+``"nkm"`` loop orders even though the domain tuple is ordered.
+
+Features are scaled to [0, 1] per block, so distance-based surrogates
+(:class:`~repro.surrogate.model.KNNSurrogate`) weigh every parameter
+equally regardless of domain size.
+"""
+
+from __future__ import annotations
+
+import numbers
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.searchspace import Config, Param, SearchSpace
+
+__all__ = ["SpaceEncoder", "is_ordinal"]
+
+
+def is_ordinal(param: Param) -> bool:
+    """True iff every domain value is a real number (bools excluded):
+    the level index is then a meaningful 1-D coordinate."""
+    return all(isinstance(v, numbers.Real) and not isinstance(v, bool)
+               for v in param.values)
+
+
+class SpaceEncoder:
+    """Maps :class:`SearchSpace` configurations to fixed-width float64
+    feature vectors.
+
+    Ordinal parameters contribute one feature: their level index
+    normalized to [0, 1] (a single-value domain encodes as 0). Categorical
+    parameters contribute one 0/1 feature per level. The encoding is a
+    pure function of the space's declared params, so two encoders over
+    the same space agree feature-for-feature.
+    """
+
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self._ordinal: dict[str, dict[object, float]] = {}
+        self._onehot: dict[str, dict[object, int]] = {}
+        names: list[str] = []
+        offset = 0
+        self._offsets: dict[str, int] = {}
+        for p in space.params:
+            self._offsets[p.name] = offset
+            if is_ordinal(p):
+                denom = max(len(p.values) - 1, 1)
+                self._ordinal[p.name] = {v: i / denom
+                                         for i, v in enumerate(p.values)}
+                names.append(p.name)
+                offset += 1
+            else:
+                self._onehot[p.name] = {v: i for i, v in enumerate(p.values)}
+                names.extend(f"{p.name}={v}" for v in p.values)
+                offset += len(p.values)
+        self.feature_names: tuple[str, ...] = tuple(names)
+        self.dim = offset
+
+    def encode(self, config: Config) -> np.ndarray:
+        """One configuration as a (dim,) float64 vector. Raises
+        ``KeyError`` for values outside the declared domains — encode
+        in-space configs only (project foreign seeds first)."""
+        x = np.zeros(self.dim, dtype=np.float64)
+        for p in self.space.params:
+            v = config[p.name]
+            base = self._offsets[p.name]
+            levels = self._ordinal.get(p.name)
+            if levels is not None:
+                x[base] = levels[v]
+            else:
+                x[base + self._onehot[p.name][v]] = 1.0
+        return x
+
+    def encode_all(self, configs: Sequence[Config]) -> np.ndarray:
+        """Stack of :meth:`encode` rows, shape (len(configs), dim)."""
+        if not configs:
+            return np.zeros((0, self.dim), dtype=np.float64)
+        return np.stack([self.encode(c) for c in configs])

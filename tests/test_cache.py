@@ -2,6 +2,8 @@
 fingerprint invalidation."""
 
 import json
+import math
+import random
 
 import pytest
 
@@ -227,6 +229,86 @@ def test_rank_donors_orders_by_shared_config_correlation(tmp_path):
     assert ranked[0][1] == pytest.approx(1.0)
     assert ranked[1][1] == pytest.approx(-1.0)
     assert ranked[2][1] is None                    # overlap < 3: no rho
+
+
+def test_spearman_tied_ranks_use_average_ranks():
+    """Ties share average ranks (the tie-robust form, not the 6Σd²
+    shortcut) — pinned against hand-computed references so the donor
+    ranking keys cannot drift."""
+    from repro.core import spearman
+    # xs ranks: [1, 2.5, 2.5, 4]; ys strictly increasing: [1, 2, 3, 4]
+    # cov = 4.5, var_x = 4.5, var_y = 5  ⇒  rho = 4.5 / sqrt(22.5)
+    assert spearman([1, 2, 2, 3], [10, 20, 30, 40]) == \
+        pytest.approx(4.5 / math.sqrt(22.5))
+    # ties on both sides, same positions: perfect rank agreement
+    assert spearman([1, 2, 2, 3], [5, 7, 7, 9]) == pytest.approx(1.0)
+    # symmetric in its arguments
+    assert spearman([1, 2, 2, 3], [10, 20, 30, 40]) == \
+        pytest.approx(spearman([10, 20, 30, 40], [1, 2, 2, 3]))
+    # an all-tied side has zero rank variance: undefined, not 0
+    assert spearman([2, 2, 2], [1, 2, 3]) is None
+
+
+def test_spearman_invariant_under_pair_reordering():
+    """rho is a function of the pair *set*: feeding the pairs in any
+    order (dict-insertion order upstream) gives the same value."""
+    from repro.core import spearman
+    xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0]
+    ys = [2.0, 7.0, 1.0, 8.0, 2.0, 8.0]
+    base = spearman(xs, ys)
+    rng = random.Random(42)
+    for _ in range(5):
+        pairs = list(zip(xs, ys))
+        rng.shuffle(pairs)
+        sx, sy = zip(*pairs)
+        assert spearman(list(sx), list(sy)) == pytest.approx(base)
+
+
+def test_rank_donors_stable_across_record_insertion_orders(tmp_path):
+    """The donor order must be a function of (rho, recency), not of the
+    order donor records happen to interleave in the file — the pools
+    dict's insertion order follows file order, so shuffling the writes
+    must not change the ranking."""
+    scores = {0: 10.0, 1: 20.0, 2: 30.0, 3: 40.0}
+    donors = {"agree": lambda s: 2 * s + 1,
+              "disagree": lambda s: -s,
+              "noisy": lambda s: s if s != 30.0 else 5.0}  # partial agreement
+    rng = random.Random(7)
+    rankings = []
+    for trial in range(3):
+        path = tmp_path / f"c{trial}.jsonl"
+        own = TrialCache(path, fingerprint="fp")
+        for x, s in scores.items():
+            own.put("b", {"x": x}, make_result(score=s))
+        writes = [(fp, x, s) for fp, f in donors.items()
+                  for x, s in scores.items()]
+        rng.shuffle(writes)                    # a different file order each time
+        for fp, x, s in writes:
+            TrialCache(path, fingerprint=fp).put(
+                "b", {"x": x}, make_result(score=donors[fp](s)))
+        cache = TrialCache(path, fingerprint="fp")
+        rankings.append([fp for fp, _ in cache.rank_donors("b")])
+    # rho orders them: agree (1.0) > noisy (partial) > disagree (-1.0),
+    # identically for every insertion order
+    assert rankings[0] == ["agree", "noisy", "disagree"]
+    assert rankings[1] == rankings[0] and rankings[2] == rankings[0]
+
+
+def test_rank_donors_equal_rho_ties_break_by_recency(tmp_path):
+    """Two donors with identical rho order by last write position —
+    deterministic, not dict-insertion luck."""
+    path = tmp_path / "c.jsonl"
+    own = TrialCache(path, fingerprint="fp")
+    for x in range(3):
+        own.put("b", {"x": x}, make_result(score=float(x)))
+    for fp in ("first", "second"):             # both rho = 1.0
+        donor = TrialCache(path, fingerprint=fp)
+        for x in range(3):
+            donor.put("b", {"x": x}, make_result(score=float(10 + x)))
+    ranked = TrialCache(path, fingerprint="fp").rank_donors("b")
+    assert [fp for fp, _ in ranked] == ["second", "first"]
+    assert ranked[0][1] == pytest.approx(1.0)
+    assert ranked[1][1] == pytest.approx(1.0)
 
 
 def test_rank_donors_recency_fallback_without_own_trials(tmp_path):

@@ -77,6 +77,102 @@ def test_append_assigns_monotone_run_index_per_series(tmp_path):
     assert len(led2) == 4
 
 
+def test_compact_keeps_best_plus_most_recent(tmp_path):
+    """A long series compacts to its best run plus the last keep_last;
+    run indices survive unrenumbered and append continues the series."""
+    led = RunLedger(tmp_path / "history.jsonl")
+    # scores 100..109, then decay: run 9 is the series' best forever
+    for k in range(10):
+        led.append(make_record(100.0 + k))
+    for k in range(6):
+        led.append(make_record(95.0 - k))
+    assert len(led) == 16
+    dropped = led.compact(keep_last=3)
+    assert dropped == 12
+    runs = led.series("dgemm", "fp")
+    assert [r.run for r in runs] == [9, 13, 14, 15]      # best + last 3
+    assert runs[0].score == 109.0
+    # on-disk state agrees with memory, and a fresh load sees the same
+    reloaded = RunLedger(tmp_path / "history.jsonl")
+    assert [r.run for r in reloaded.series("dgemm", "fp")] == [9, 13, 14, 15]
+    # the next append continues where the series left off
+    assert reloaded.append(make_record(96.0)).run == 16
+    # a second compact of an already-compact ledger is a no-op
+    led2 = RunLedger(tmp_path / "history.jsonl")
+    assert led2.compact(keep_last=3) == 1    # run 13 now superseded by 16
+    assert led2.compact(keep_last=3) == 0
+
+
+def test_compact_respects_each_series_direction_and_scope(tmp_path):
+    """Per-series best uses the record's own recorded direction, and
+    compaction of one series never touches another."""
+    led = RunLedger(tmp_path / "history.jsonl")
+    for k, s in enumerate([5.0, 1.0, 4.0, 3.0, 2.0]):    # run 1 is best (min)
+        led.append(make_record(s, benchmark="latency",
+                               direction=Direction.MINIMIZE.value))
+    led.append(make_record(50.0, benchmark="triad"))
+    led.compact(keep_last=1)
+    lat = led.series("latency", "fp")
+    assert [r.run for r in lat] == [1, 4]                # min-best + newest
+    assert len(led.series("triad", "fp")) == 1           # untouched
+
+
+def test_compact_preserves_foreign_lines_and_regression_baseline(tmp_path):
+    """Foreign lines (other versions, torn writes) survive the rewrite
+    verbatim, and the regression baseline — the best historical run —
+    still gates after compaction."""
+    path = tmp_path / "history.jsonl"
+    led = RunLedger(path)
+    led.append(make_record(100.0))           # the best: must survive
+    for k in range(5):
+        led.append(make_record(90.0 - k))
+    with open(path, "a", encoding="utf-8") as f:
+        f.write('{"ledger_version": 999, "alien": true}\n')
+        f.write('{"torn...\n')
+    led2 = RunLedger(path)
+    led2.compact(keep_last=2)
+    text = path.read_text(encoding="utf-8")
+    assert '"alien": true' in text
+    assert '{"torn...' in text
+    report = detect_regressions(RunLedger(path))
+    (series,) = report.series
+    assert series.verdict == "regressed"     # newest 85 vs best 100 survives
+    assert series.comparison.baseline.mean == pytest.approx(100.0)
+
+
+def test_compact_missing_ledger_and_bad_args(tmp_path):
+    led = RunLedger(tmp_path / "nope.jsonl")
+    assert led.compact(keep_last=5) == 0     # nothing on disk: no-op
+    with pytest.raises(ValueError):
+        led.compact(keep_last=0)
+
+
+def test_tune_cli_compact_history_standalone(tmp_path):
+    """scripts/tune.py --compact-history works without --session (pure
+    maintenance) and reports what it dropped."""
+    led = RunLedger(tmp_path / "history.jsonl")
+    for k in range(8):
+        led.append(make_record(100.0 + k))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "tune.py"),
+         "--cache-dir", str(tmp_path), "--compact-history", "2"],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "dropped 6 of 8" in proc.stdout   # best (run 7) is in the last 2
+    assert [r.run for r in RunLedger(tmp_path / "history.jsonl")
+            .series("dgemm", "fp")] == [6, 7]
+    # without --session and without --compact-history: usage error
+    bad = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "tune.py"),
+         "--cache-dir", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert bad.returncode == 2
+    assert "--session is required" in bad.stderr
+
+
 def test_record_roundtrip_is_exact(tmp_path):
     led = RunLedger(tmp_path / "history.jsonl")
     rec = led.append(make_record(123.456, strategy="exhaustive",

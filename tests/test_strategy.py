@@ -195,6 +195,45 @@ def test_random_search_respects_budget():
     assert len(seen) == 5                        # without replacement
 
 
+def test_random_search_reservoir_is_deterministic_per_seed():
+    """Identical seed ⇒ identical proposal set AND identical visit order
+    across runs — the reservoir draw and the final shuffle both hang off
+    the one seeded rng, so resumed/cached sessions replay exactly."""
+    space = grid(a=(1, 2, 3, 4, 5), b=(10, 20, 30, 40))
+    runs = [Tuner(space, SETTINGS,
+                  strategy=RandomSearchStrategy(budget=7, seed=11)).tune(
+        plane_benchmark) for _ in range(2)]
+    assert [t.config for t in runs[0].trials] == \
+        [t.config for t in runs[1].trials]
+    assert len(runs[0].trials) == 7
+    other = Tuner(space, SETTINGS,
+                  strategy=RandomSearchStrategy(budget=7, seed=12)).tune(
+        plane_benchmark)
+    assert [t.config for t in other.trials] != \
+        [t.config for t in runs[0].trials]
+
+
+def test_random_search_budget_above_cardinality_degrades_to_exhaustive():
+    """A budget larger than the space is a full sweep: every config is
+    proposed exactly once and the reservoir never truncates."""
+    space = grid(x=tuple(range(9)))
+    result = Tuner(space, SETTINGS,
+                   strategy=RandomSearchStrategy(budget=50, seed=0)).tune(
+        quadratic_benchmark)
+    assert len(result.trials) == space.cardinality
+    assert {t.config["x"] for t in result.trials} == set(range(9))
+    assert result.best_config == {"x": 7}
+
+
+def test_random_search_seeds_count_against_budget():
+    space = grid(x=tuple(range(12)))
+    result = Tuner(space, SETTINGS,
+                   strategy=RandomSearchStrategy(budget=4, seed=0)).tune(
+        quadratic_benchmark, seeds=[{"x": 7}])
+    assert result.trials[0].config == {"x": 7}       # seed front-loaded
+    assert len(result.trials) == 4                   # budget includes it
+
+
 def test_neighborhood_climbs_multi_param_space():
     space = grid(a=(1, 2, 3, 4, 5), b=(10, 20, 30, 40))
     result = Tuner(space, SETTINGS,

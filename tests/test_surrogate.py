@@ -1,0 +1,440 @@
+"""Model-guided search: encoding, surrogates, acquisition, and the
+surrogate/bandit strategies through the shared engine — including the
+acceptance criterion (optimum at ≤ 40% of the exhaustive budget on serial
+and process backends, with strategy attribution in cache, ledger, and
+dashboards)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (Direction, EvaluationSettings, ProcessPoolBackend,
+                        SearchSpace, TrialCache, Tuner, compare_techniques,
+                        grid, param)
+from repro.core.welford import WelfordState, from_samples
+from repro.surrogate import (BanditStrategy, BayesianRidgeSurrogate,
+                             KNNSurrogate, SpaceEncoder, SurrogateStrategy,
+                             expected_improvement, is_ordinal, make_surrogate,
+                             noise_adjusted_best, poly_dim,
+                             upper_confidence_bound)
+
+SETTINGS = EvaluationSettings(max_invocations=3, max_iterations=20,
+                              use_ci_convergence=True, use_inner_prune=True,
+                              use_outer_prune=True)
+
+
+def surface_benchmark(cfg):
+    """Deterministic module-level 2-D objective — picklable for the
+    process pool — with the optimum at (a=5, b=3), score 100."""
+    mu = 100.0 - (cfg["a"] - 5) ** 2 - 0.5 * (cfg["b"] - 3) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+def surface_space() -> SearchSpace:
+    return grid(a=tuple(range(8)), b=tuple(range(8)))
+
+
+# ---------------------------------------------------------------------------
+# Encoding
+# ---------------------------------------------------------------------------
+
+
+def test_ordinal_params_encode_as_normalized_level_index():
+    space = grid(n=(256, 512, 1024), k=(64, 4096))
+    enc = SpaceEncoder(space)
+    assert enc.dim == 2
+    assert enc.feature_names == ("n", "k")
+    # level index, not raw value: the geometric ladder spreads uniformly
+    assert enc.encode({"n": 256, "k": 64}).tolist() == [0.0, 0.0]
+    assert enc.encode({"n": 512, "k": 4096}).tolist() == [0.5, 1.0]
+    assert enc.encode({"n": 1024, "k": 64}).tolist() == [1.0, 0.0]
+
+
+def test_categorical_params_encode_one_hot():
+    space = SearchSpace([param("order", ("nmk", "nkm", "knm")),
+                         param("n", (1, 2))])
+    assert not is_ordinal(space.params[0])
+    assert is_ordinal(space.params[1])
+    enc = SpaceEncoder(space)
+    assert enc.dim == 4
+    assert enc.feature_names == ("order=nmk", "order=nkm", "order=knm", "n")
+    assert enc.encode({"order": "nkm", "n": 2}).tolist() == [0, 1, 0, 1.0]
+
+
+def test_bools_are_categorical_not_ordinal():
+    space = SearchSpace([param("fuse", (False, True))])
+    enc = SpaceEncoder(space)
+    assert enc.dim == 2          # one-hot: no order-distance between flags
+    assert enc.encode({"fuse": True}).tolist() == [0.0, 1.0]
+
+
+def test_encode_all_shape_and_out_of_domain():
+    space = grid(x=(1, 2, 3))
+    enc = SpaceEncoder(space)
+    X = enc.encode_all(space.ordered("exhaustive"))
+    assert X.shape == (3, 1)
+    assert enc.encode_all([]).shape == (0, 1)
+    with pytest.raises(KeyError):
+        enc.encode({"x": 99})
+
+
+# ---------------------------------------------------------------------------
+# Surrogate models
+# ---------------------------------------------------------------------------
+
+
+def test_ridge_learns_quadratic_and_uncertainty_shrinks():
+    rng = np.random.default_rng(0)
+    model = BayesianRidgeSurrogate(dim=1)
+    f = lambda x: 10.0 - 8.0 * (x - 0.6) ** 2        # noqa: E731
+    xs = rng.uniform(0, 1, size=12)
+    for x in xs:
+        model.observe(np.array([x]), f(x))
+    grid_x = np.linspace(0, 1, 21)[:, None]
+    mean, std = model.predict(grid_x)
+    # the degree-2 expansion represents the target exactly
+    assert np.allclose(mean, [f(x) for x in grid_x[:, 0]], atol=0.3)
+    assert int(np.argmax(mean)) == 12                # x = 0.6
+    # more data ⇒ tighter posterior everywhere
+    before = std.mean()
+    for x in rng.uniform(0, 1, size=24):
+        model.observe(np.array([x]), f(x))
+    _, after = model.predict(grid_x)
+    assert after.mean() < before
+    assert model.n_observed == 36
+
+
+def test_ridge_predicts_prior_before_any_observation():
+    model = BayesianRidgeSurrogate(dim=2)
+    mean, std = model.predict(np.zeros((3, 2)))
+    assert mean.shape == std.shape == (3,)
+    assert np.all(std > 0)
+    assert model.n_observed == 0
+
+
+def test_knn_interpolates_and_grows_uncertainty_with_distance():
+    model = KNNSurrogate(dim=1, k=2)
+    for x, y in [(0.0, 1.0), (0.5, 2.0), (1.0, 3.0)]:
+        model.observe(np.array([x]), y)
+    mean, std = model.predict(np.array([[0.5], [10.0]]))
+    assert mean[0] == pytest.approx(2.0, abs=0.2)    # on a data point
+    assert std[1] > std[0]                           # far away ⇒ uncertain
+
+
+def test_make_surrogate_auto_picks_knn_for_tiny_spaces():
+    assert make_surrogate("auto", dim=1, cardinality=12).name == "knn"
+    assert make_surrogate("auto", dim=2, cardinality=64).name == "ridge"
+    assert make_surrogate("ridge", dim=3, cardinality=4).name == "ridge"
+    with pytest.raises(ValueError):
+        make_surrogate("gp", dim=1, cardinality=10)
+    assert poly_dim(2) == 6          # 1 + 2 + 3
+
+
+# ---------------------------------------------------------------------------
+# Acquisition
+# ---------------------------------------------------------------------------
+
+
+def test_expected_improvement_prefers_mean_then_uncertainty():
+    best = 10.0
+    mean = np.array([9.0, 11.0, 11.0, 9.9])
+    std = np.array([0.0, 0.0, 0.0, 2.0])
+    ei = expected_improvement(mean, std, best, xi=0.0)
+    assert ei[0] == 0.0                      # below best, no uncertainty
+    assert ei[1] == pytest.approx(1.0)       # certain improvement = delta
+    assert ei[3] > 0.0                       # uncertain near-best: worth a try
+    # equal means: the more uncertain candidate wins
+    ei2 = expected_improvement(np.array([9.5, 9.5]), np.array([0.1, 2.0]),
+                               best, xi=0.0)
+    assert ei2[1] > ei2[0]
+
+
+def test_expected_improvement_minimize_direction():
+    ei = expected_improvement(np.array([5.0, 15.0]), np.array([0.0, 0.0]),
+                              best=10.0, direction=Direction.MINIMIZE,
+                              xi=0.0)
+    assert ei[0] == pytest.approx(5.0)       # 5 below the incumbent
+    assert ei[1] == 0.0
+
+
+def test_ucb_uses_the_papers_normal_quantile():
+    from repro.core import normal_quantile
+    mean, std = np.array([1.0]), np.array([2.0])
+    ucb = upper_confidence_bound(mean, std, confidence=0.99)
+    assert ucb[0] == pytest.approx(1.0 + normal_quantile(0.99) * 2.0)
+    lcb = upper_confidence_bound(mean, std, direction=Direction.MINIMIZE,
+                                 confidence=0.99)
+    assert lcb[0] == pytest.approx(-1.0 + normal_quantile(0.99) * 2.0)
+
+
+def test_noise_adjusted_best_is_the_ci_bound_facing_the_search():
+    state = from_samples([10.0, 10.5, 9.5, 10.2, 9.8])
+    hi = noise_adjusted_best(state, 0.99, Direction.MAXIMIZE)
+    lo = noise_adjusted_best(state, 0.99, Direction.MINIMIZE)
+    assert lo < float(state.mean) < hi
+    # degenerate stream: unbounded CI falls back to the mean
+    one = WelfordState(count=1.0, mean=42.0, m2=0.0)
+    assert noise_adjusted_best(one, 0.99, Direction.MAXIMIZE) == 42.0
+
+
+# ---------------------------------------------------------------------------
+# SurrogateStrategy through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_surrogate_respects_budget_and_never_repeats():
+    result = Tuner(surface_space(), SETTINGS,
+                   strategy=SurrogateStrategy(budget=20, seed=0)).tune(
+        surface_benchmark)
+    assert len(result.trials) == 20
+    keys = {(t.config["a"], t.config["b"]) for t in result.trials}
+    assert len(keys) == 20                   # without replacement
+    assert result.strategy == "surrogate"
+
+
+def test_surrogate_identical_seed_identical_proposals():
+    runs = [Tuner(surface_space(), SETTINGS,
+                  strategy=SurrogateStrategy(budget=16, seed=7)).tune(
+        surface_benchmark) for _ in range(2)]
+    assert [t.config for t in runs[0].trials] == \
+        [t.config for t in runs[1].trials]
+
+
+@pytest.mark.parametrize("acquisition", ["ei", "ucb"])
+@pytest.mark.parametrize("model", ["auto", "knn"])
+def test_surrogate_variants_find_good_configs(model, acquisition):
+    result = Tuner(surface_space(), SETTINGS,
+                   strategy=SurrogateStrategy(budget=24, seed=1, model=model,
+                                              acquisition=acquisition)).tune(
+        surface_benchmark)
+    assert result.best_score >= 98.0         # within the paper's 2% budget
+
+
+def test_surrogate_seeds_evaluated_first():
+    result = Tuner(surface_space(), SETTINGS,
+                   strategy=SurrogateStrategy(budget=8, seed=0)).tune(
+        surface_benchmark, seeds=[{"a": 5, "b": 3}])
+    assert result.trials[0].config == {"a": 5, "b": 3}
+    assert result.n_seeded == 1
+    assert result.best_score == pytest.approx(100.0)
+
+
+def test_surrogate_budget_above_cardinality_sweeps_everything():
+    space = grid(x=tuple(range(6)))
+    result = Tuner(space, SETTINGS,
+                   strategy=SurrogateStrategy(budget=50, seed=0)).tune(
+        surface_benchmark_1d)
+    assert len(result.trials) == 6           # exhausted, then stopped
+
+
+def surface_benchmark_1d(cfg):
+    mu = 100.0 - (cfg["x"] - 3) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+def test_surrogate_invalid_arguments():
+    with pytest.raises(ValueError):
+        SurrogateStrategy(budget=0)
+    with pytest.raises(ValueError):
+        SurrogateStrategy(acquisition="pi")
+    with pytest.raises(ValueError):
+        SurrogateStrategy(n_init=0)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: optimum at ≤ 40% of the exhaustive budget, serial AND
+# process backends, with strategy attribution everywhere downstream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend_factory",
+                         [lambda: None, lambda: ProcessPoolBackend(2)],
+                         ids=["serial", "process"])
+def test_surrogate_reaches_exhaustive_incumbent_under_40pct(tmp_path,
+                                                            backend_factory):
+    from repro.history import RunLedger, render_html
+
+    space = surface_space()
+    exhaustive = Tuner(space, SETTINGS).tune(surface_benchmark)
+    budget = int(space.cardinality * 0.4)    # the acceptance ceiling
+    assert budget < space.cardinality
+
+    cache = TrialCache(tmp_path / "s.jsonl", fingerprint="fp")
+    ledger = RunLedger(tmp_path / "history.jsonl")
+    result = Tuner(space, SETTINGS,
+                   strategy=SurrogateStrategy(budget=budget, seed=0)).tune(
+        surface_benchmark, backend=backend_factory(),
+        cache=cache.bound("surface"),
+        ledger=ledger.bound("surface", "fp"), timestamp=1_700_000_000.0)
+
+    assert len(result.trials) <= budget
+    within_2pct = abs(result.best_score - exhaustive.best_score) \
+        <= 0.02 * abs(exhaustive.best_score)
+    assert result.best_config == exhaustive.best_config or within_2pct
+    # attribution: every cache record carries the producing strategy...
+    trials = cache.trials()
+    assert trials and all(t.strategy == "surrogate" for t in trials)
+    # ...the ledger's distilled run record does too...
+    (run,) = ledger.series("surface", "fp")
+    assert run.strategy == "surrogate"
+    assert run.config == result.best_config
+    # ...and the HTML trend dashboard renders it in the strategy column
+    html = render_html(ledger=ledger)
+    assert "surrogate" in html
+
+
+def test_bandit_reaches_exhaustive_incumbent_under_40pct():
+    space = surface_space()
+    exhaustive = Tuner(space, SETTINGS).tune(surface_benchmark)
+    budget = int(space.cardinality * 0.4)
+    result = Tuner(space, SETTINGS,
+                   strategy=BanditStrategy(budget=budget, seed=0)).tune(
+        surface_benchmark)
+    assert len(result.trials) <= budget
+    within_2pct = abs(result.best_score - exhaustive.best_score) \
+        <= 0.02 * abs(exhaustive.best_score)
+    assert result.best_config == exhaustive.best_config or within_2pct
+
+
+# ---------------------------------------------------------------------------
+# BanditStrategy specifics
+# ---------------------------------------------------------------------------
+
+
+def test_bandit_identical_seed_identical_proposals():
+    runs = [Tuner(surface_space(), SETTINGS,
+                  strategy=BanditStrategy(budget=16, seed=5)).tune(
+        surface_benchmark) for _ in range(2)]
+    assert [t.config for t in runs[0].trials] == \
+        [t.config for t in runs[1].trials]
+
+
+def test_bandit_exhausts_small_space_and_stops():
+    space = grid(x=tuple(range(5)))
+    result = Tuner(space, SETTINGS,
+                   strategy=BanditStrategy(budget=40, seed=0)).tune(
+        surface_benchmark_1d)
+    assert len(result.trials) == 5           # feasible space exhausted
+    assert result.best_config == {"x": 3}
+
+
+def test_bandit_respects_constraints():
+    space = grid(x=tuple(range(8))).constrain(lambda c: c["x"] % 2 == 0)
+    result = Tuner(space, SETTINGS,
+                   strategy=BanditStrategy(budget=10, seed=0)).tune(
+        surface_benchmark_1d)
+    assert all(t.config["x"] % 2 == 0 for t in result.trials)
+    assert len(result.trials) == 4
+
+
+def test_bandit_seeds_evaluated_first():
+    result = Tuner(surface_space(), SETTINGS,
+                   strategy=BanditStrategy(budget=6, seed=0)).tune(
+        surface_benchmark, seeds=[{"a": 5, "b": 3}])
+    assert result.trials[0].config == {"a": 5, "b": 3}
+    assert result.best_score == pytest.approx(100.0)
+
+
+def test_bandit_minimize_direction():
+    import dataclasses
+    settings = dataclasses.replace(SETTINGS, direction=Direction.MINIMIZE,
+                                   use_inner_prune=False,
+                                   use_outer_prune=False)
+    space = grid(x=tuple(range(8)))
+
+    result = Tuner(space, settings,
+                   strategy=BanditStrategy(budget=8, seed=0)).tune(
+        valley_benchmark)
+    assert result.best_config == {"x": 2}
+
+
+def valley_benchmark(cfg):
+    mu = (cfg["x"] - 2) ** 2
+
+    def factory():
+        return lambda: mu
+
+    return factory
+
+
+def test_bandit_invalid_arguments():
+    with pytest.raises(ValueError):
+        BanditStrategy(budget=0)
+    with pytest.raises(ValueError):
+        BanditStrategy(batch=0)
+
+
+# ---------------------------------------------------------------------------
+# compare_techniques: model-guided rows next to the paper's grid
+# ---------------------------------------------------------------------------
+
+
+def test_compare_techniques_accepts_strategy_rows():
+    space = grid(x=tuple(range(10)))
+    out = compare_techniques(
+        space, surface_benchmark_1d, SETTINGS,
+        techniques={
+            "C+I+O": (SETTINGS, "exhaustive"),
+            "Surrogate": (SETTINGS, SurrogateStrategy(budget=6, seed=0)),
+            "Bandit": (SETTINGS, BanditStrategy(budget=6, seed=0)),
+        })
+    assert out["C+I+O"].strategy == "exhaustive"
+    assert out["Surrogate"].strategy == "surrogate"
+    assert out["Bandit"].strategy == "bandit"
+    assert len(out["Surrogate"].trials) <= 6
+    assert out["C+I+O"].best_config == {"x": 3}
+
+
+# ---------------------------------------------------------------------------
+# CLI: --strategy surrogate|bandit on the synthetic benchmark
+# ---------------------------------------------------------------------------
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_tune_cli(tmp_path, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "tune.py"),
+         "--cache-dir", str(tmp_path), *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=300)
+
+
+def test_cli_surrogate_strategy_on_synthetic(tmp_path):
+    proc = _run_tune_cli(tmp_path, "--session", "s",
+                         "--benchmark", "synthetic",
+                         "--strategy", "surrogate", "--budget", "8",
+                         "--seed", "0")
+    assert proc.returncode == 0, proc.stderr
+    assert "strategy   : surrogate (acquisition=ei)" in proc.stdout
+    assert "best      : {'x': 7}" in proc.stdout
+    assert "strategy  : surrogate" in proc.stdout
+    # the session cache annotates every record with the strategy
+    from repro.core.cache import iter_trials
+    trials = list(iter_trials(tmp_path / "s.jsonl"))
+    assert trials and all(t.strategy == "surrogate" for t in trials)
+    assert len(trials) <= 8
+
+
+def test_cli_bandit_strategy_on_synthetic(tmp_path):
+    proc = _run_tune_cli(tmp_path, "--session", "b",
+                         "--benchmark", "synthetic",
+                         "--strategy", "bandit", "--budget", "9",
+                         "--seed", "0")
+    assert proc.returncode == 0, proc.stderr
+    assert "strategy   : bandit" in proc.stdout
+    assert "best      : {'x': 7}" in proc.stdout
