@@ -9,11 +9,9 @@ interpret mode for functional verification of the winner."""
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import Direction, EvaluationSettings, SearchSpace, Tuner, grid
 from repro.kernels.matmul import matmul, matmul_ref, vmem_bytes

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.core import EvaluationSettings, Evaluator, Tuner
+from repro.core import Evaluator, Tuner
 
 from .common import (dgemm_benchmark, dgemm_invocation_factory, dgemm_space,
                      emit, paper_settings, print_table)

@@ -7,9 +7,8 @@ and reports the peak bandwidth of each regime."""
 from __future__ import annotations
 
 import dataclasses
-import time
 
-from repro.core import EvaluationSettings, Evaluator
+from repro.core import Evaluator
 
 from .common import emit, paper_settings, print_table, triad_invocation_factory
 

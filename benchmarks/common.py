@@ -6,17 +6,16 @@ plus richer per-table output to stderr-safe stdout sections.
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (Direction, EvaluationSettings, SearchSpace, grid,
                         timed_sampler)
 from repro.core.searchspace import doubling_from, powers_of_two
+from repro.lint import WorkloadSpec
 
 CSV_ROWS: list[tuple[str, float, str]] = []
 
@@ -40,6 +39,31 @@ def print_table(title: str, rows: list[dict]) -> None:
 # ---------------------------------------------------------------------------
 # Host benchmark objectives (the paper's DGEMM / TRIAD on this machine)
 # ---------------------------------------------------------------------------
+#
+# Work terms are computed by the shared helpers below and declared to the
+# workload audit (``repro.lint``) through each benchmark's ``audit_spec``
+# attribute — the audit traces the *same kernel* with the *same formula*
+# the invocation factory uses, so a drifted declaration cannot hide.
+
+
+def dgemm_flops(n: int, m: int, k: int) -> float:
+    """Raw FLOPs of one (n,k)x(k,m) matmul — the DGEMM work term."""
+    return 2.0 * n * m * k
+
+
+def triad_length(n_bytes: int, dtype=jnp.float32) -> int:
+    """Vector length for a TRIAD working set of ~n_bytes (three arrays)."""
+    return max(1024, n_bytes // (3 * jnp.dtype(dtype).itemsize))
+
+
+def triad_moved_bytes(n_bytes: int, dtype=jnp.float32) -> float:
+    """Raw bytes moved per TRIAD call (read A, read B, write C)."""
+    return 3.0 * triad_length(n_bytes, dtype) * jnp.dtype(dtype).itemsize
+
+
+def triad_kernel(x, y):
+    """TRIAD C = A + 3B — shared between the timed factory and the audit."""
+    return x + 3.0 * y
 
 
 def dgemm_invocation_factory(n: int, m: int, k: int,
@@ -51,7 +75,7 @@ def dgemm_invocation_factory(n: int, m: int, k: int,
     The data seed is derived from the matrix dimensions plus an invocation
     counter — deterministic across reruns (reproducible cache keys and
     resumable sessions) while still varying between invocations."""
-    flops = 2.0 * n * m * k
+    flops = dgemm_flops(n, m, k)
     invocation = itertools.count()
 
     def factory():
@@ -73,19 +97,15 @@ def dgemm_invocation_factory(n: int, m: int, k: int,
 
 def triad_invocation_factory(n_bytes: int, dtype=jnp.float32) -> Callable:
     """TRIAD C = A + 3B over vectors totalling ~n_bytes working set."""
-    itemsize = jnp.dtype(dtype).itemsize
-    n = max(1024, n_bytes // (3 * itemsize))
-    moved = 3.0 * n * itemsize
+    n = triad_length(n_bytes, dtype)
+    moved = triad_moved_bytes(n_bytes, dtype)
 
     def factory():
         key = jax.random.key(n % (2 ** 31))
         a = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
         b = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
 
-        @jax.jit
-        def f(x, y):
-            return x + 3.0 * y
-
+        f = jax.jit(triad_kernel)
         jax.block_until_ready(f(a, b))
 
         def run():
@@ -131,7 +151,9 @@ def synthetic_benchmark(cfg: dict) -> Callable:
     smoke-testing session mechanics without timing noise.
 
     The three CLI benchmarks are module-level functions (not lambdas) so
-    they pickle into ``ProcessPoolBackend`` workers.
+    they pickle into ``ProcessPoolBackend`` workers. ``synthetic`` is
+    deliberately *not* auditable (no device kernel to trace): it
+    exercises the linter's MS100 info path.
     """
     mu = 100.0 - (cfg["x"] - 7) ** 2
 
@@ -139,3 +161,39 @@ def synthetic_benchmark(cfg: dict) -> Callable:
         return lambda: mu
 
     return factory
+
+
+# -- workload audit declarations (repro.lint pass 1) ------------------------
+
+def dgemm_audit_spec(cfg: dict) -> WorkloadSpec:
+    n, m, k = cfg["n"], cfg["m"], cfg["k"]
+    dtype = jnp.float32
+    return WorkloadSpec(
+        fn=jnp.dot,
+        args=(jax.ShapeDtypeStruct((n, k), dtype),
+              jax.ShapeDtypeStruct((k, m), dtype)),
+        work=dgemm_flops(n, m, k), unit="flops", dtype="float32",
+        name=f"dgemm[{n}x{m}x{k}]")
+
+
+def triad_audit_spec(cfg: dict) -> WorkloadSpec:
+    n_bytes = cfg["n_bytes"]
+    dtype = jnp.float32
+    n = triad_length(n_bytes, dtype)
+    return WorkloadSpec(
+        fn=triad_kernel,
+        args=(jax.ShapeDtypeStruct((n,), dtype),
+              jax.ShapeDtypeStruct((n,), dtype)),
+        work=triad_moved_bytes(n_bytes, dtype), unit="bytes",
+        dtype="float32", name=f"triad[{n_bytes}B]")
+
+
+dgemm_benchmark.audit_spec = dgemm_audit_spec
+triad_benchmark.audit_spec = triad_audit_spec
+
+#: benchmarks `scripts/lint.py` audits (pass 1), with a sample config each
+AUDITED_WORKLOADS: dict[str, tuple[Callable, dict]] = {
+    "dgemm": (dgemm_benchmark, {"n": 256, "m": 256, "k": 64}),
+    "triad": (triad_benchmark, {"n_bytes": 1 << 20}),
+    "synthetic": (synthetic_benchmark, {"x": 7}),
+}

@@ -14,6 +14,19 @@ cd "$(dirname "$0")/.."
 echo "== compileall =="
 python -m compileall -q src scripts benchmarks examples tests
 
+echo "== measurement-soundness lint =="
+# blocking: exit 1 on any warning/error finding (see docs/linting.md)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/lint.py
+
+echo "== ruff (style baseline, when available) =="
+# the reference container does not ship ruff; GitHub CI installs a pinned
+# one (see .github/workflows/ci.yml) so the style gate still blocks there
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "ruff not installed; skipping style baseline"
+fi
+
 echo "== tier-1 pytest =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Measurement-soundness linter CLI (see docs/linting.md).
+
+    PYTHONPATH=src python scripts/lint.py                 # all three passes
+    PYTHONPATH=src python scripts/lint.py --no-trace      # skip pass 1
+    PYTHONPATH=src python scripts/lint.py --json          # machine output
+    PYTHONPATH=src python scripts/lint.py src/repro/core  # explicit paths
+
+Passes (stable finding codes — ``repro.lint.CODES``):
+
+  1. workload audit (MS1xx): trace each benchmark registered in
+     ``benchmarks.common.AUDITED_WORKLOADS`` and cross-check its declared
+     work term against the compiled kernel's cost. Needs jax; skip with
+     ``--no-trace`` (CI runs it; a quick pre-commit may not want to).
+  2. harness lint (MS2xx): AST timing-pitfall checks over the given
+     paths (default: src/ benchmarks/ scripts/).
+  3. lock discipline (MS3xx): concurrency invariants of the shared
+     JSONL stores (trial cache, run ledger).
+
+Exit codes: 0 = clean (info-level findings allowed), 1 = warning/error
+findings, 2 = usage or internal failure. ``--json`` prints the stable
+document (``lint_version``, per-finding code/path/line/severity/pass,
+summary counts) for CI artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_REPO), str(_REPO / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.lint import (filter_suppressed, findings_to_json,  # noqa: E402
+                        check_lock_discipline, lint_paths, worst_severity)
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+
+#: generated/vendored trees the AST passes skip
+EXCLUDE = (".tuning_sessions", "__pycache__", ".git")
+
+
+def _relativize(findings, root: pathlib.Path):
+    out = []
+    for f in findings:
+        try:
+            rel = str(pathlib.Path(f.path).resolve().relative_to(root))
+        except ValueError:
+            rel = f.path
+        out.append(type(f)(code=f.code, path=rel, line=f.line,
+                           message=f.message, severity=f.severity,
+                           pass_name=f.pass_name))
+    return out
+
+
+def run_workload_audit() -> list:
+    """Pass 1 over every registered benchmark (one sample config each)."""
+    from benchmarks.common import AUDITED_WORKLOADS
+    from repro.lint import audit_benchmark
+    findings = []
+    for name, (bench, cfg) in sorted(AUDITED_WORKLOADS.items()):
+        findings.extend(audit_benchmark(bench, cfg, name=name))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs for the AST passes "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the stable JSON report on stdout")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip pass 1 (workload audit needs jax + traces "
+                         "every registered benchmark)")
+    args = ap.parse_args(argv)
+
+    root = _REPO
+    paths = args.paths or [str(root / p) for p in DEFAULT_PATHS]
+    for p in paths:
+        if not pathlib.Path(p).exists():
+            print(f"lint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = []
+    try:
+        findings += lint_paths(paths, exclude=EXCLUDE)
+        findings += check_lock_discipline(root=root)
+        if not args.no_trace:
+            findings += run_workload_audit()
+    except Exception as e:   # internal failure must not read as "clean"
+        print(f"lint: internal error: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 2
+
+    findings = _relativize(filter_suppressed(findings), root)
+    doc = findings_to_json(findings)
+    if args.as_json:
+        print(json.dumps(doc, indent=2))
+    else:
+        for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+            print(f.render())
+        s = doc["summary"]
+        print(f"lint: {s['error']} error(s), {s['warning']} warning(s), "
+              f"{s['info']} info")
+    return 1 if worst_severity(findings) in ("warning", "error") else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

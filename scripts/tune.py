@@ -141,6 +141,12 @@ def main() -> int:
     ap.add_argument("--cache-dir", default=".tuning_sessions")
     ap.add_argument("--no-warm-start", action="store_true",
                     help="do not seed the incumbent from cached trials")
+    ap.add_argument("--validate", default="warn",
+                    choices=("off", "warn", "strict"),
+                    help="pre-run workload audit (repro.lint pass 1): "
+                         "cross-check the benchmark's declared work term "
+                         "against the traced kernel cost before any trial "
+                         "runs; 'strict' aborts on a mismatch")
     ap.add_argument("--fresh", action="store_true",
                     help="discard this session's cached trials first")
     ap.add_argument("--report", action="store_true",
@@ -240,7 +246,8 @@ def main() -> int:
     import time
 
     result = session.run(backend=args.backend, progress=progress,
-                         seeds=seeds, timestamp=time.time())
+                         seeds=seeds, timestamp=time.time(),
+                         validate=args.validate)
     print(f"\nbest      : {result.best_config}  score={result.best_score}")
     print(f"trials    : {len(result.trials)}  cached={result.n_cached}  "
           f"pruned={result.n_pruned}  samples={result.total_samples}")

@@ -1,7 +1,7 @@
-"""Dry-run analysis: HLO collective parsing + roofline terms."""
+"""Dry-run analysis: HLO collective parsing, cost extraction + roofline terms."""
 
-from .hlo import CollectiveStats, parse_collectives
+from .hlo import CollectiveStats, HloCost, parse_collectives, parse_hlo_cost
 from .terms import RooflineTerms, analyze_compiled, model_flops
 
-__all__ = ["CollectiveStats", "RooflineTerms", "analyze_compiled",
-           "model_flops", "parse_collectives"]
+__all__ = ["CollectiveStats", "HloCost", "RooflineTerms", "analyze_compiled",
+           "model_flops", "parse_collectives", "parse_hlo_cost"]

@@ -1,4 +1,4 @@
-"""Parse collective traffic out of compiled HLO text.
+"""Parse collective traffic and compute/memory cost out of compiled HLO text.
 
 ``cost_analysis`` does not report collective bytes, so we scan the compiled
 module for all-gather / all-reduce / reduce-scatter / all-to-all /
@@ -12,6 +12,14 @@ estimated per-device link traffic with the standard ring-algorithm factors:
     collective-permute bytes                   (point-to-point)
 
 where n is the replica-group size parsed from the op's replica_groups.
+
+:func:`parse_hlo_cost` is the text-level sibling for compute cost: it
+re-derives FLOP and byte counts for dot / elementwise / copy-like ops from
+the module text alone. The measurement-soundness linter
+(:mod:`repro.lint.workload`) cross-checks a benchmark's *declared* work
+term against this traced cost (falling back to it when the backend's
+``cost_analysis`` reports nothing), so a DGEMM that silently stopped doing
+2·n·m·k FLOPs is caught before the tuner spends hours timing it.
 """
 
 from __future__ import annotations
@@ -89,6 +97,147 @@ class CollectiveStats:
                      {o: (self.count_by_op[o], self.bytes_by_op[o])
                       for o in self.count_by_op}.items())]
         return " ".join(parts) if parts else "none"
+
+
+# ---------------------------------------------------------------------------
+# Compute/memory cost extraction (measurement-soundness audit, pass 1)
+# ---------------------------------------------------------------------------
+
+# ops whose FLOP count is one op per result element
+_ELEMENTWISE_OPS = frozenset({
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "remainder", "atan2", "compare", "and", "or", "xor", "not", "negate",
+    "abs", "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "sqrt", "rsqrt", "cbrt", "cosine", "sine", "tan", "logistic", "erf",
+    "clamp", "select",
+})
+
+# pure data movement: no FLOPs, operand + result bytes count as traffic
+_COPY_OPS = frozenset({
+    "copy", "transpose", "reshape", "broadcast", "concatenate", "slice",
+    "dynamic-slice", "dynamic-update-slice", "pad", "reverse", "gather",
+    "convert", "iota",
+})
+
+# structural ops that move no data themselves (fusion bodies are separate
+# computations in the same text, so their inner ops are already counted)
+_SKIP_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "fusion", "call",
+    "bitcast", "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "custom-call", "while", "conditional", "domain", "opt-barrier",
+}) | set(_COLLECTIVES)
+
+# generic "name = shape op(" — the op token is the word before the operand
+# list; versioned names (%add.0) carry the version after the paren match
+_COST_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[a-z][a-z0-9-]*)\(",
+)
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_numel(shape_str: str) -> int:
+    """Total element count over every sub-shape of ``shape_str`` (tuples
+    sum; a scalar ``f32[]`` counts 1; unknown dtypes still count)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _operand_text(line: str, start: int) -> str:
+    """The text between the op's opening paren at ``start`` and its
+    balanced closing paren (operand lists never nest in practice, but
+    ``fusion(..., calls=...)`` attributes keep this honest)."""
+    depth = 0
+    for i in range(start, len(line)):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:i]
+    return line[start + 1:]
+
+
+@dataclasses.dataclass(frozen=True)
+class HloCost:
+    """Text-derived compute/memory cost estimate of one HLO module.
+
+    ``flops`` counts dot contractions (2·M·N·K) and one op per result
+    element for elementwise ops; ``bytes_accessed`` counts operand plus
+    result bytes of every costed op (an upper-bound traffic model: fused
+    intermediates are counted even though they never reach memory).
+    ``unhandled`` tallies op kinds the model does not cost — nonzero
+    entries mean the estimate is partial, not that parsing failed.
+    """
+
+    flops: float
+    bytes_accessed: float
+    flops_by_op: dict[str, float]
+    bytes_by_op: dict[str, float]
+    unhandled: dict[str, int]
+
+    def summary(self) -> str:
+        return (f"flops={self.flops:.3g} bytes={self.bytes_accessed:.3g}"
+                + (f" unhandled={sorted(self.unhandled)}"
+                   if self.unhandled else ""))
+
+
+def parse_hlo_cost(hlo_text: str) -> HloCost:
+    """Extract FLOP/byte costs for dot / elementwise / copy ops from HLO
+    text (compiled ``.as_text()`` or handwritten fixtures).
+
+    Fusion *bodies* are separate named computations in the same text, so
+    counting every line once costs fused ops exactly once; the calling
+    ``fusion`` instruction itself is structural and skipped.
+    """
+    flops_by_op: dict[str, float] = defaultdict(float)
+    bytes_by_op: dict[str, float] = defaultdict(float)
+    unhandled: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COST_OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        shape = m.group("shape")
+        if op in _SKIP_OPS or op.endswith("-start") or op.endswith("-done"):
+            continue
+        operands = _operand_text(line, m.end() - 1)
+        moved = _shape_bytes(shape) + _shape_bytes(operands)
+        if op == "dot":
+            lhs = _SHAPE_RE.search(operands)
+            contract = 1
+            cm = _CONTRACT_RE.search(line)
+            if lhs is not None and cm is not None and cm.group(1):
+                dims = [int(d) for d in lhs.group("dims").split(",")] \
+                    if lhs.group("dims") else []
+                for idx in cm.group(1).split(","):
+                    i = int(idx)
+                    if 0 <= i < len(dims):
+                        contract *= dims[i]
+            flops_by_op[op] += 2.0 * _shape_numel(shape) * contract
+            bytes_by_op[op] += moved
+        elif op in _ELEMENTWISE_OPS:
+            flops_by_op[op] += float(_shape_numel(shape))
+            bytes_by_op[op] += moved
+        elif op in _COPY_OPS:
+            bytes_by_op[op] += moved
+        else:
+            unhandled[op] += 1
+    return HloCost(flops=sum(flops_by_op.values()),
+                   bytes_accessed=sum(bytes_by_op.values()),
+                   flops_by_op=dict(flops_by_op),
+                   bytes_by_op=dict(bytes_by_op),
+                   unhandled=dict(unhandled))
 
 
 def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:

@@ -17,7 +17,7 @@ import dataclasses
 
 from ..core.roofline import TPU_V5E, MachineSpec
 from ..models.config import ModelConfig, WorkloadShape
-from .hlo import CollectiveStats, parse_collectives
+from .hlo import parse_collectives
 
 
 @dataclasses.dataclass(frozen=True)

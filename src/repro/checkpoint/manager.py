@@ -22,7 +22,6 @@ interface is deliberately the same shape).
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

@@ -303,12 +303,27 @@ class TrialCache:
         line = json.dumps(rec, default=str)
         ckey = config_key(config)
         entry = (config, result, strategy)
+        # the threading lock serializes writers in this process; the
+        # advisory flock serializes them across processes — parallel
+        # sessions (or a session racing a report) share one cache file,
+        # and interleaved buffered appends would tear both records
+        try:
+            import fcntl
+        except ImportError:              # pragma: no cover - non-POSIX
+            fcntl = None
         with self._lock:
             self._entries[(benchmark, ckey, settings_key)] = entry
             self._latest[(benchmark, ckey)] = entry + (settings_key,)
             self.path.parent.mkdir(parents=True, exist_ok=True)
             with open(self.path, "a", encoding="utf-8") as f:
-                f.write(line + "\n")
+                if fcntl is not None:
+                    fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                try:
+                    f.write(line + "\n")
+                    f.flush()
+                finally:
+                    if fcntl is not None:
+                        fcntl.flock(f.fileno(), fcntl.LOCK_UN)
 
     def best(self, benchmark: str, direction: Direction,
              settings_key: Optional[str] = None,
@@ -545,12 +560,16 @@ class TuningSession:
             ledger = RunLedger(path)
         self.ledger = ledger
 
-    def run(self, backend=None, progress=None, seeds=(), timestamp=None):
+    def run(self, backend=None, progress=None, seeds=(), timestamp=None,
+            validate: str = "warn"):
         """Execute the wrapped tuner against the session cache. ``seeds``
         are transfer-tuning warm-start configs (see
         ``TrialCache.suggest_seeds``), forwarded to ``Tuner.tune``.
         ``timestamp`` (caller-supplied epoch seconds — core never reads a
-        clock for records) stamps the ledger entry this run appends."""
+        clock for records) stamps the ledger entry this run appends.
+        ``validate`` gates the pre-run workload audit exactly as in
+        ``Tuner.tune`` — strict mode fails the session before any trial
+        (or cache read) happens."""
         bound_ledger = None
         if self.ledger is not None:
             bound_ledger = self.ledger.bound(self.benchmark_name,
@@ -561,4 +580,4 @@ class TuningSession:
                                cache=self.cache.bound(self.benchmark_name),
                                warm_start=self.warm_start,
                                seeds=seeds, ledger=bound_ledger,
-                               timestamp=timestamp)
+                               timestamp=timestamp, validate=validate)

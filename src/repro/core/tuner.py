@@ -130,7 +130,8 @@ class Tuner:
              backend: Optional[ExecutionBackend] = None,
              cache=None, warm_start: bool = False,
              seeds: Sequence[Config] = (),
-             ledger=None, timestamp: Optional[float] = None) -> TuningResult:
+             ledger=None, timestamp: Optional[float] = None,
+             validate: str = "warn") -> TuningResult:
         """Search the space for the best configuration.
 
         ``backend`` schedules the evaluations (default
@@ -148,9 +149,24 @@ class Tuner:
         is appended to the performance-history ledger, stamped with the
         caller-supplied ``timestamp`` — the engine itself never reads a
         clock for record content.
+
+        ``validate`` gates the pre-run **workload audit**
+        (:mod:`repro.lint`): when the benchmark exposes an ``audit_spec``
+        attribute, its declared work term is cross-checked against the
+        traced kernel cost for the space's first configuration *before
+        any trial executes*. ``"warn"`` (default) raises
+        :class:`~repro.lint.WorkloadAuditWarning`s and proceeds;
+        ``"strict"`` raises :class:`~repro.lint.WorkloadAuditError`
+        instead, so a mis-declared workload never burns measurement
+        time; ``"off"`` skips the audit.
         """
         from .cache import settings_key
 
+        if validate not in ("off", "warn", "strict"):
+            raise ValueError(f"validate must be 'off', 'warn' or 'strict', "
+                             f"got {validate!r}")
+        if validate != "off":
+            self._validate_workload(benchmark, strict=validate == "strict")
         if backend is None:
             backend = SerialBackend(clock=self.clock)
         strategy = self.strategy
@@ -247,6 +263,40 @@ class Tuner:
             ledger.record(result, settings_key=session_key,
                           timestamp=timestamp, direction=direction)
         return result
+
+    def _validate_workload(self, benchmark, strict: bool) -> None:
+        """Pre-run measurement-soundness audit (lint pass 1).
+
+        Audits the benchmark's ``audit_spec`` against the space's first
+        configuration. Info-level findings (MS100: benchmark opted out)
+        are always silent; anything else raises
+        :class:`~repro.lint.WorkloadAuditError` in strict mode or is
+        surfaced as :class:`~repro.lint.WorkloadAuditWarning`s otherwise.
+        Audit *machinery* failures never abort a warn-mode run."""
+        import warnings
+
+        from repro.lint import (WorkloadAuditError, WorkloadAuditWarning,
+                                audit_benchmark)
+        try:
+            config = next(iter(self.space.configs()))
+        except StopIteration:
+            return   # empty space: tune() will produce an empty result
+        try:
+            findings = [f for f in audit_benchmark(benchmark, config)
+                        if f.severity != "info"]
+        except Exception as e:
+            if strict:
+                raise
+            warnings.warn(f"workload audit could not run: "
+                          f"{type(e).__name__}: {e}",
+                          WorkloadAuditWarning, stacklevel=3)
+            return
+        if not findings:
+            return
+        if strict:
+            raise WorkloadAuditError(findings)
+        for f in findings:
+            warnings.warn(f.render(), WorkloadAuditWarning, stacklevel=3)
 
     def _project_seeds(self, seeds: Sequence[Config]) -> tuple[Config, ...]:
         """Map transfer seeds into this space (nearest in-space config),

@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import ModelConfig, WorkloadShape
 
 
 @dataclasses.dataclass(frozen=True)

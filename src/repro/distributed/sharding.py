@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Sequence
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import params as params_lib

@@ -29,8 +29,6 @@ import json
 import time
 import traceback
 
-import jax
-
 from .. import configs
 from ..analysis.hlo import parse_collectives
 from ..analysis.terms import RooflineTerms, model_flops

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
 ARCH_ORDER = ["command-r-plus-104b", "granite-3-2b", "minicpm-2b", "gemma-2b",
               "whisper-base", "granite-moe-1b-a400m", "mixtral-8x22b",

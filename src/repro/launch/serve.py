@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import configs
-from ..distributed import sharding as sh
 from ..models import api
 from ..models import params as params_lib
 from ..models.config import WorkloadShape
@@ -53,7 +52,10 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
                                  step_cfg=step_cfg).jitted()
     t0 = time.perf_counter()
     logits, cache = prefill(params, batch_data)
-    jax.block_until_ready(logits)
+    # sync BOTH outputs: the KV cache is consumed by decode below, so a
+    # logits-only sync would stop the prefill clock while cache writes
+    # are still in flight (lint MS206)
+    jax.block_until_ready((logits, cache))
     t_prefill = time.perf_counter() - t0
     cache = api.extend_cache(cache, gen)
 

@@ -17,7 +17,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

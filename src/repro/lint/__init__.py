@@ -1,0 +1,38 @@
+"""Measurement-soundness linter: static audit of benchmarks, timing
+harness, and ledger lock discipline.
+
+Three passes, three failure classes the paper's methodology cannot
+tolerate (``docs/linting.md`` has the full catalogue):
+
+  1. **workload audit** (:mod:`.workload`, MS1xx) — traces each
+     benchmark's kernel and cross-checks the *declared* work term the
+     evaluator divides by against the compiler's *actual* cost
+  2. **harness lint** (:mod:`.harness`, MS2xx) — AST checks for timing
+     pitfalls: missing ``block_until_ready``, wall clocks, jit inside
+     timed loops, discarded results, unseeded RNG, partial syncs
+  3. **lock discipline** (:mod:`.locks`, MS3xx) — concurrency
+     invariants of the shared JSONL stores (flock, inode re-check,
+     temp+fsync+replace)
+
+``scripts/lint.py`` is the CLI; ``Tuner.tune(validate=...)`` runs pass 1
+as a pre-run gate so a mis-declared workload is caught before the first
+trial burns measurement time.
+"""
+
+from .findings import (CODES, LINT_VERSION, Finding, WorkloadAuditError,
+                       WorkloadAuditWarning, filter_suppressed,
+                       findings_to_json, make_finding, worst_severity)
+from .harness import lint_file, lint_paths, lint_source
+from .locks import (DEFAULT_LOCK_TARGETS, check_lock_discipline,
+                    check_lock_source)
+from .workload import (TracedCost, WorkloadSpec, audit_benchmark,
+                       audit_workload, trace_cost)
+
+__all__ = [
+    "CODES", "DEFAULT_LOCK_TARGETS", "Finding", "LINT_VERSION",
+    "TracedCost", "WorkloadAuditError", "WorkloadAuditWarning",
+    "WorkloadSpec", "audit_benchmark", "audit_workload",
+    "check_lock_discipline", "check_lock_source", "filter_suppressed",
+    "findings_to_json", "lint_file", "lint_paths", "lint_source",
+    "make_finding", "trace_cost", "worst_severity",
+]

@@ -1,0 +1,371 @@
+"""Pass 2 — harness lint: AST checks for timing pitfalls.
+
+A *timed region* is the span between ``t0 = <clock>()`` and the last
+statement subtracting ``t0`` in the same statement block — the
+gettimeofday-around-the-kernel pattern the paper (and
+``timed_sampler``) uses. Within and around such regions this pass flags:
+
+  MS201  region performs device work (jax/jnp call or a jitted callable)
+         with no ``block_until_ready`` before the clock stops — async
+         dispatch means the measured time excludes the actual compute
+  MS202  ``time.time()`` in a timing path (wall clock, not monotonic;
+         timestamps outside subtraction chains are fine)
+  MS203  ``jax.jit`` invoked inside a loop in a timed region —
+         recompilation is timed as if it were kernel work
+  MS204  a device computation's result discarded inside a timed region —
+         nothing forces the work to exist (DCE) or to finish (async)
+  MS205  unseeded legacy RNG (``numpy.random.*`` module functions,
+         stdlib ``random.*``) — benchmark data must be reproducible
+  MS206  ``block_until_ready`` on one name of a multi-output unpacking
+         whose sibling outputs are used later — the clock stops while
+         the unsynced outputs may still be computing
+
+Heuristics are deliberately scoped to this repo's idioms: opaque calls
+(``fn()``, ``tuner.tune()``) are trusted to sync internally, so timing
+wrappers over callbacks do not false-positive. Suppress intentional
+exceptions with ``# lint: ok=MS2xx`` on the flagged line.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, Iterator, Optional
+
+from .findings import Finding, make_finding
+
+__all__ = ["lint_file", "lint_paths", "lint_source"]
+
+_CLOCKS = {
+    "time.time", "time.time_ns", "time.clock",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+}
+_WALL_CLOCKS = {"time.time", "time.time_ns", "time.clock"}
+
+_SEEDED_NUMPY = {"default_rng", "Generator", "SeedSequence", "RandomState",
+                 "BitGenerator", "PCG64", "MT19937", "Philox", "SFC64"}
+_SEEDED_STDLIB = {"Random", "SystemRandom", "seed", "getstate", "setstate"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base is not None else None
+    return None
+
+
+def _walk_stmts(stmts: list[ast.stmt]) -> Iterator[ast.stmt]:
+    """Statements of one scope, descending control flow but not defs."""
+    for st in stmts:
+        yield st
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(st, field, None)
+            if sub:
+                yield from _walk_stmts(sub)
+        for handler in getattr(st, "handlers", ()):
+            yield from _walk_stmts(handler.body)
+
+
+def _child_functions(stmts: list[ast.stmt]) -> Iterator[ast.AST]:
+    """Function scopes directly inside this scope (class bodies are
+    transparent: methods chain to the enclosing module scope)."""
+    for st in stmts:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield st
+        elif isinstance(st, ast.ClassDef):
+            yield from _child_functions(st.body)
+        else:
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(st, field, None)
+                if sub:
+                    yield from _child_functions(sub)
+            for handler in getattr(st, "handlers", ()):
+                yield from _child_functions(handler.body)
+
+
+def _subtracts(st: ast.stmt, name: str) -> bool:
+    """Does this statement compute ``... - name`` (or ``name - ...``)?"""
+    for node in ast.walk(st):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+            for side in (node.left, node.right):
+                if isinstance(side, ast.Name) and side.id == name:
+                    return True
+    return False
+
+
+class _Scope:
+    """Timed-region analysis of one function (or the module body)."""
+
+    def __init__(self, linter: "_FileLinter", node: ast.AST,
+                 jitted: frozenset[str]):
+        self.linter = linter
+        self.node = node
+        self.jitted = set(jitted)
+
+    # -- name resolution ------------------------------------------------------
+    def resolve(self, dotted: Optional[str]) -> Optional[str]:
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        full = self.linter.aliases.get(head, head)
+        return f"{full}.{rest}" if rest else full
+
+    def call_name(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(_dotted(call.func))
+
+    def is_clock(self, node: ast.AST) -> Optional[str]:
+        """Resolved clock name when ``node`` is a clock call."""
+        if not isinstance(node, ast.Call):
+            return None
+        name = self.call_name(node)
+        if name in _CLOCKS:
+            return name
+        # injected clocks (``self.clock()``, ``clock()``): treated monotonic
+        if name is not None and (name == "clock" or name.endswith(".clock")):
+            return "clock"
+        return None
+
+    def is_sync(self, call: ast.Call) -> bool:
+        name = self.call_name(call)
+        return name is not None and name.endswith("block_until_ready")
+
+    def is_device_call(self, call: ast.Call) -> bool:
+        """Does this call visibly dispatch device work? Opaque calls
+        (plain callbacks) are trusted to sync internally."""
+        name = self.call_name(call)
+        if name is None:
+            return False
+        if name.endswith("block_until_ready") or name.startswith("jax.debug"):
+            return False
+        if name == "jax" or name.startswith("jax."):
+            return True
+        return name.split(".")[0] in self.jitted
+
+    # -- scanning -------------------------------------------------------------
+    def scan(self) -> None:
+        body = getattr(self.node, "body", [])
+        self._collect_jitted(body)
+        for block in self._blocks(body):
+            self._scan_block(block)
+
+    def _collect_jitted(self, stmts: list[ast.stmt]) -> None:
+        """Names bound to jitted callables: ``f = jax.jit(g)`` or
+        ``step = builder(...).jitted()``."""
+        for st in _walk_stmts(stmts):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name) \
+                    and isinstance(st.value, ast.Call):
+                name = self.call_name(st.value)
+                jitted = name == "jax.jit" if name is not None else False
+                # ``builder(...).jitted()``: the receiver is a call, so the
+                # dotted chain is unresolvable — match the attr directly
+                if isinstance(st.value.func, ast.Attribute) \
+                        and st.value.func.attr == "jitted":
+                    jitted = True
+                if jitted:
+                    self.jitted.add(st.targets[0].id)
+
+    def _blocks(self, stmts: list[ast.stmt]) -> Iterator[list[ast.stmt]]:
+        """Every statement list in this scope, stopping at nested defs."""
+        yield stmts
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(st, field, None)
+                if sub:
+                    yield from self._blocks(sub)
+            for handler in getattr(st, "handlers", ()):
+                yield from self._blocks(handler.body)
+
+    def _scan_block(self, stmts: list[ast.stmt]) -> None:
+        for i, st in enumerate(stmts):
+            if not (isinstance(st, ast.Assign) and len(st.targets) == 1
+                    and isinstance(st.targets[0], ast.Name)):
+                continue
+            clock = self.is_clock(st.value)
+            if clock is None:
+                continue
+            t0 = st.targets[0].id
+            limit = len(stmts)   # a later ``t0 = clock()`` starts a new region
+            for j in range(i + 1, len(stmts)):
+                nxt = stmts[j]
+                if isinstance(nxt, ast.Assign) \
+                        and any(isinstance(t, ast.Name) and t.id == t0
+                                for t in nxt.targets):
+                    limit = j
+                    break
+            ends = [j for j in range(i + 1, limit)
+                    if _subtracts(stmts[j], t0)]
+            if not ends:
+                continue   # never differenced: a timestamp, not a timer
+            if clock in _WALL_CLOCKS:
+                self._flag("MS202", st,
+                           f"{t0} = {clock}(): wall clock in a timing "
+                           f"path; use time.perf_counter")
+            region = stmts[i + 1:ends[-1] + 1]
+            self._check_region(region, stmts[ends[-1]], stmts[ends[-1] + 1:])
+
+    def _check_region(self, region: list[ast.stmt], end: ast.stmt,
+                      after: list[ast.stmt]) -> None:
+        device_calls: list[ast.Call] = []
+        syncs: list[ast.Call] = []
+        for st in region:
+            for node in ast.walk(st):
+                if not isinstance(node, ast.Call):
+                    continue
+                if self.is_sync(node):
+                    syncs.append(node)
+                elif self.is_device_call(node):
+                    device_calls.append(node)
+                if st is end and self.call_name(node) in _WALL_CLOCKS:
+                    self._flag("MS202", node,
+                               "time.time() closes a timed region; "
+                               "use time.perf_counter")
+        if device_calls and not syncs:
+            self._flag("MS201", end,
+                       "timed region dispatches device work (line "
+                       f"{device_calls[0].lineno}) but never calls "
+                       "block_until_ready before reading the clock")
+        for st in region:
+            if isinstance(st, ast.Expr) and isinstance(st.value, ast.Call) \
+                    and self.is_device_call(st.value):
+                self._flag("MS204", st,
+                           "device computation result discarded inside a "
+                           "timed region — DCE/async dispatch make the "
+                           "timing meaningless; bind and sync it")
+            for loop in ast.walk(st):
+                if isinstance(loop, (ast.For, ast.While)):
+                    for node in ast.walk(loop):
+                        if isinstance(node, ast.Call) \
+                                and self.call_name(node) == "jax.jit":
+                            self._flag("MS203", node,
+                                       "jax.jit invoked inside a timed "
+                                       "loop — compilation is measured "
+                                       "as if it were kernel time")
+        self._check_partial_sync(region, after, syncs)
+
+    def _check_partial_sync(self, region: list[ast.stmt],
+                            after: list[ast.stmt],
+                            syncs: list[ast.Call]) -> None:
+        unpacked: dict[str, set[str]] = {}
+        for st in region:
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Tuple) \
+                    and isinstance(st.value, ast.Call) \
+                    and self.is_device_call(st.value):
+                names = {e.id for e in st.targets[0].elts
+                         if isinstance(e, ast.Name)}
+                for n in names:
+                    unpacked[n] = names
+        if not unpacked:
+            return
+        used_after = {node.id for st in after for node in ast.walk(st)
+                      if isinstance(node, ast.Name)
+                      and isinstance(node.ctx, ast.Load)}
+        for sync in syncs:
+            if len(sync.args) != 1 or not isinstance(sync.args[0], ast.Name):
+                continue
+            synced = sync.args[0].id
+            siblings = unpacked.get(synced, set()) - {synced}
+            stale = sorted(siblings & used_after)
+            if stale:
+                self._flag("MS206", sync,
+                           f"block_until_ready({synced}) leaves sibling "
+                           f"output(s) {', '.join(stale)} unsynced but used "
+                           f"later — sync the full tuple so the timed "
+                           f"region covers all outputs")
+
+    def _flag(self, code: str, node: ast.AST, message: str) -> None:
+        self.linter.findings.append(make_finding(
+            code, self.linter.path, getattr(node, "lineno", 0), message))
+
+
+class _FileLinter:
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.aliases: dict[str, str] = {}
+        self.findings: list[Finding] = []
+        self._collect_imports()
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def run(self) -> list[Finding]:
+        self._visit_scope(self.tree, frozenset())
+        self._check_rng()
+        return self.findings
+
+    def _visit_scope(self, node: ast.AST, jitted: frozenset[str]) -> None:
+        scope = _Scope(self, node, jitted)
+        scope.scan()
+        inherited = frozenset(scope.jitted)
+        for fn in _child_functions(getattr(node, "body", [])):
+            self._visit_scope(fn, inherited)
+
+    def _check_rng(self) -> None:
+        scope = _Scope(self, self.tree, frozenset())
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = scope.call_name(node)
+            if name is None or "." not in name:
+                continue
+            head, leaf = name.rsplit(".", 1)
+            if head in ("numpy.random", "np.random") \
+                    and leaf not in _SEEDED_NUMPY:
+                self.findings.append(make_finding(
+                    "MS205", self.path, node.lineno,
+                    f"{name}: legacy global-state RNG — benchmark data "
+                    f"must come from a seeded numpy Generator "
+                    f"(default_rng(seed))"))
+            elif head == "random" and leaf not in _SEEDED_STDLIB:
+                self.findings.append(make_finding(
+                    "MS205", self.path, node.lineno,
+                    f"{name}: unseeded stdlib RNG — use a seeded "
+                    f"random.Random(seed) instance"))
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [make_finding("MS104", path, e.lineno or 0,
+                             f"file does not parse: {e.msg}")]
+    return _FileLinter(path, tree).run()
+
+
+def lint_file(path: str | Path) -> list[Finding]:
+    return lint_source(Path(path).read_text(encoding="utf-8"), str(path))
+
+
+def lint_paths(paths: Iterable[str | Path],
+               exclude: Iterable[str] = ()) -> list[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    out: list[Finding] = []
+    skip = tuple(exclude)
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            if any(s in str(f) for s in skip):
+                continue
+            out.extend(lint_file(f))
+    return out

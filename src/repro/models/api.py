@@ -13,7 +13,6 @@ arrays matching ``config.input_specs``.
 
 from __future__ import annotations
 
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ ShapeDtypeStruct stand-ins the dry-run lowers against.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax

@@ -13,7 +13,6 @@ use* (same params, distinct caches).
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.actctx import shard_act
-from ..kernels.flash_attention import attention_ref, flash_attention
+from ..kernels.flash_attention import flash_attention
 from .config import ModelConfig
 from .params import ParamDef
 

@@ -10,8 +10,7 @@ self blocks of the group.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

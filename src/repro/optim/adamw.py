@@ -8,7 +8,7 @@ this is ZeRO-sharded optimizer state for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

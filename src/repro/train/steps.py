@@ -11,7 +11,6 @@ The same bundles serve three consumers:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -23,8 +22,7 @@ from ..distributed.actctx import activation_sharding
 from ..models import api
 from ..models import layers as layers_lib
 from ..models import params as params_lib
-from ..models.config import (ModelConfig, WorkloadShape, cache_len,
-                             input_specs)
+from ..models.config import (ModelConfig, WorkloadShape, input_specs)
 from ..models.transformer import StepConfig
 from ..optim import AdamWConfig, adamw_update, make_schedule, opt_state_defs
 

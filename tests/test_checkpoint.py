@@ -1,9 +1,7 @@
 """Checkpoint substrate: atomicity, roundtrip, retention, corruption."""
 
-import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,8 +1,6 @@
 """Data pipeline: determinism, resumability, structure."""
 
-import jax
 import numpy as np
-import pytest
 
 from repro.data import DataConfig, SyntheticLM
 

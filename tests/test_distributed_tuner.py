@@ -1,10 +1,8 @@
 """Distributed CI-pruned tuning (beyond-paper extension)."""
 
-import numpy as np
 import pytest
 
 from repro.core import EvaluationSettings
-from repro.core import welford as W
 from repro.core.searchspace import grid
 from repro.core.tuner import Tuner
 from repro.distributed.tuner import (DistributedTuner, replicated_evaluate,

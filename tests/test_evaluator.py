@@ -1,6 +1,5 @@
 """Two-level evaluation process (paper Fig. 2)."""
 
-import numpy as np
 import pytest
 
 from repro.core.evaluator import EvaluationSettings, Evaluator, timed_sampler

@@ -1,0 +1,159 @@
+"""HLO text parsing: shape/byte arithmetic, collective traffic factors,
+and the text-level cost model the workload audit falls back on."""
+
+from __future__ import annotations
+
+import textwrap
+
+from repro.analysis.hlo import (_shape_bytes, _shape_numel, parse_collectives,
+                                parse_hlo_cost)
+
+# ---------------------------------------------------------------------------
+# _shape_bytes / _shape_numel
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes_simple_array():
+    assert _shape_bytes("f32[4,8]{1,0}") == 4 * 8 * 4
+
+
+def test_shape_bytes_tuple_sums_subshapes():
+    assert _shape_bytes("(f32[4]{0}, f32[4]{0})") == 2 * 4 * 4
+
+
+def test_shape_bytes_mixed_dtypes():
+    assert _shape_bytes("(bf16[8]{0}, s32[2]{0})") == 8 * 2 + 2 * 4
+
+
+def test_shape_bytes_scalar():
+    # a scalar f32[] has one element
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_shape_bytes_unknown_dtype_skipped():
+    assert _shape_bytes("token[]") == 0
+    assert _shape_bytes("(f32[4]{0}, token[])") == 16
+
+
+def test_shape_numel_counts_unknown_dtypes():
+    # numel is a structural count: unknown dtypes still contribute
+    assert _shape_numel("(f32[4]{0}, u4[8]{0})") == 12
+    assert _shape_numel("f32[]") == 1
+
+
+# ---------------------------------------------------------------------------
+# parse_collectives
+# ---------------------------------------------------------------------------
+
+AR_LINE = ("  %ar = f32[1024]{0} all-reduce(%x), "
+           "replica_groups={{0,1,2,3}}, to_apply=%add\n")
+
+
+def test_all_reduce_ring_factor():
+    stats = parse_collectives(AR_LINE, n_devices=4)
+    assert stats.count_by_op == {"all-reduce": 1}
+    assert stats.bytes_by_op["all-reduce"] == 2.0 * 1024 * 4 * (3 / 4)
+
+
+def test_group_size_from_iota_groups():
+    line = ("  %ag = bf16[16,64]{1,0} all-gather(%x), "
+            "replica_groups=[2,8], dimensions={0}\n")
+    stats = parse_collectives(line, n_devices=999)
+    assert stats.bytes_by_op["all-gather"] == 16 * 64 * 2 * (7 / 8)
+
+
+def test_missing_replica_groups_uses_default():
+    line = "  %cp = f32[256]{0} collective-permute(%x)\n"
+    stats = parse_collectives(line, n_devices=2)
+    assert stats.bytes_by_op["collective-permute"] == 256 * 4
+
+
+def test_single_device_is_free():
+    # n<=1 means no cross-device traffic at all
+    stats = parse_collectives(AR_LINE.replace("{{0,1,2,3}}", "{{0}}"),
+                              n_devices=1)
+    assert stats.total_bytes == 0
+    assert stats.total_count == 0
+
+
+def test_async_done_not_double_counted():
+    text = (
+        "  %s = f32[64]{0} all-reduce-start(%x), replica_groups={{0,1}}\n"
+        "  %d = f32[64]{0} all-reduce-done(%s)\n"
+    )
+    stats = parse_collectives(text, n_devices=2)
+    assert stats.count_by_op == {"all-reduce": 1}
+
+
+def test_empty_module_summary():
+    stats = parse_collectives("HloModule empty\n", n_devices=8)
+    assert stats.total_bytes == 0
+    assert stats.summary() == "none"
+
+
+# ---------------------------------------------------------------------------
+# parse_hlo_cost (the audit's text-level fallback)
+# ---------------------------------------------------------------------------
+
+DOT_MODULE = textwrap.dedent("""\
+    HloModule dot
+
+    ENTRY %main (a: f32[64,32], b: f32[32,48]) -> f32[64,48] {
+      %a = f32[64,32]{1,0} parameter(0)
+      %b = f32[32,48]{1,0} parameter(1)
+      ROOT %dot = f32[64,48]{1,0} dot(f32[64,32]{1,0} %a, f32[32,48]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+""")
+
+
+def test_dot_flops_are_2mnk():
+    cost = parse_hlo_cost(DOT_MODULE)
+    assert cost.flops == 2 * 64 * 48 * 32      # 196608
+    assert cost.flops_by_op == {"dot": 196608.0}
+    # operands + result traffic
+    assert cost.bytes_by_op["dot"] == (64 * 32 + 32 * 48 + 64 * 48) * 4
+    assert cost.unhandled == {}
+
+
+def test_elementwise_one_flop_per_element():
+    text = "  %add = f32[128]{0} add(f32[128]{0} %x, f32[128]{0} %y)\n"
+    cost = parse_hlo_cost(text)
+    assert cost.flops == 128
+    assert cost.bytes_accessed == (128 + 128 + 128) * 4
+
+
+def test_copy_ops_move_bytes_but_no_flops():
+    text = "  %t = f32[8,16]{0,1} transpose(%x), dimensions={1,0}\n"
+    cost = parse_hlo_cost(text)
+    assert cost.flops == 0
+    assert cost.bytes_by_op["transpose"] > 0
+
+
+def test_structural_ops_are_free():
+    text = textwrap.dedent("""\
+        %p = f32[4]{0} parameter(0)
+        %t = (f32[4]{0}, f32[4]{0}) tuple(%p, %p)
+        %g = f32[4]{0} get-tuple-element(%t), index=0
+    """)
+    cost = parse_hlo_cost(text)
+    assert cost.flops == 0
+    assert cost.bytes_accessed == 0
+    assert cost.unhandled == {}
+
+
+def test_unhandled_ops_are_tallied_not_costed():
+    text = "  %s = f32[4,4]{1,0} cholesky(%x)\n"
+    cost = parse_hlo_cost(text)
+    assert cost.unhandled == {"cholesky": 1}
+    assert "unhandled" in cost.summary()
+
+
+def test_compiled_jax_dot_matches_formula():
+    import pytest
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    text = jax.jit(jnp.dot).lower(a, b).compile().as_text()
+    cost = parse_hlo_cost(text)
+    assert cost.flops_by_op.get("dot") == 2 * 64 * 48 * 32

@@ -1,0 +1,519 @@
+"""Measurement-soundness linter (repro.lint): finding codes on broken
+fixtures, suppression syntax, the CLI JSON contract, and the Tuner's
+pre-run workload audit hook."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint import (CODES, LINT_VERSION, WorkloadAuditError,
+                        WorkloadAuditWarning, check_lock_discipline,
+                        check_lock_source, filter_suppressed, lint_file,
+                        lint_source, worst_severity)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def codes(findings):
+    return sorted(f.code for f in findings)
+
+
+def run_lint(source):
+    return lint_source(textwrap.dedent(source), path="fixture.py")
+
+
+# ---------------------------------------------------------------------------
+# Pass 2 — harness timing pitfalls (MS2xx)
+# ---------------------------------------------------------------------------
+
+def test_ms201_timed_device_call_without_sync():
+    findings = run_lint("""
+        import time
+        import jax.numpy as jnp
+
+        def bench(a, b):
+            t0 = time.perf_counter()
+            c = jnp.dot(a, b)
+            return time.perf_counter() - t0
+    """)
+    assert "MS201" in codes(findings)
+
+
+def test_ms202_wall_clock_in_timed_region():
+    findings = run_lint("""
+        import time
+        import jax
+
+        def bench(f, x):
+            t0 = time.time()
+            jax.block_until_ready(f(x))
+            return time.time() - t0
+    """)
+    assert "MS202" in codes(findings)
+    assert "MS201" not in codes(findings)
+
+
+def test_ms203_jit_inside_timed_loop():
+    findings = run_lint("""
+        import time
+        import jax
+
+        def bench(g, xs):
+            t0 = time.perf_counter()
+            for x in xs:
+                f = jax.jit(g)
+                jax.block_until_ready(f(x))
+            return time.perf_counter() - t0
+    """)
+    assert "MS203" in codes(findings)
+
+
+def test_ms204_discarded_device_result():
+    findings = run_lint("""
+        import time
+        import jax
+
+        def bench(g, x):
+            f = jax.jit(g)
+            t0 = time.perf_counter()
+            f(x)
+            jax.block_until_ready(x)
+            return time.perf_counter() - t0
+    """)
+    assert "MS204" in codes(findings)
+
+
+def test_ms205_unseeded_rng():
+    findings = run_lint("""
+        import numpy as np
+        import random
+
+        def data(n):
+            return np.random.rand(n), random.random()
+    """)
+    assert codes(findings).count("MS205") == 2
+
+
+def test_ms205_seeded_generators_clean():
+    findings = run_lint("""
+        import numpy as np
+        import random
+
+        def data(n, seed):
+            rng = np.random.default_rng(seed)
+            r = random.Random(seed)
+            return rng.normal(size=n), r.random()
+    """)
+    assert "MS205" not in codes(findings)
+
+
+def test_ms206_partial_tuple_sync():
+    findings = run_lint("""
+        import time
+        import jax
+
+        def bench(g, params, batch):
+            f = jax.jit(g)
+            t0 = time.perf_counter()
+            logits, cache = f(params, batch)
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            return dt, cache
+    """)
+    assert "MS206" in codes(findings)
+
+
+def test_clean_harness_has_no_findings():
+    findings = run_lint("""
+        import time
+        import jax
+
+        def bench(g, x):
+            f = jax.jit(g)
+            jax.block_until_ready(f(x))   # pre-heat
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x))
+            return time.perf_counter() - t0
+    """)
+    assert findings == []
+
+
+def test_t0_reassignment_starts_new_region():
+    # the second region syncs; only the first should be flagged
+    findings = run_lint("""
+        import time
+        import jax.numpy as jnp
+        import jax
+
+        def bench(a, b):
+            t0 = time.perf_counter()
+            c = jnp.dot(a, b)
+            dt1 = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            jax.block_until_ready(jnp.dot(a, b))
+            dt2 = time.perf_counter() - t0
+            return dt1, dt2
+    """)
+    assert codes(findings) == ["MS201"]
+
+
+# ---------------------------------------------------------------------------
+# Suppression
+# ---------------------------------------------------------------------------
+
+def lint_fixture_file(tmp_path, source):
+    fixture = tmp_path / "fixture.py"
+    fixture.write_text(textwrap.dedent(source))
+    return lint_file(fixture)
+
+
+def test_suppression_of_named_code(tmp_path):
+    findings = lint_fixture_file(tmp_path, """
+        import time
+        import jax
+
+        def bench(f, x):
+            t0 = time.time()   # lint: ok=MS202
+            jax.block_until_ready(f(x))
+            return time.perf_counter() - t0
+    """)
+    assert "MS202" in codes(findings)
+    assert "MS202" not in codes(filter_suppressed(findings))
+
+
+def test_bare_suppression_covers_all_codes(tmp_path):
+    findings = lint_fixture_file(tmp_path, """
+        import numpy as np
+
+        def data(n):
+            return np.random.rand(n)   # lint: ok
+    """)
+    assert "MS205" in codes(findings)
+    assert filter_suppressed(findings) == []
+
+
+def test_suppression_of_other_code_keeps_finding(tmp_path):
+    findings = lint_fixture_file(tmp_path, """
+        import numpy as np
+
+        def data(n):
+            return np.random.rand(n)   # lint: ok=MS999
+    """)
+    assert "MS205" in codes(filter_suppressed(findings))
+
+
+# ---------------------------------------------------------------------------
+# Pass 3 — lock discipline (MS3xx)
+# ---------------------------------------------------------------------------
+
+def test_ms301_unlocked_append():
+    findings = check_lock_source(textwrap.dedent("""
+        class Store:
+            def put(self, line):
+                with open(self.path, "a") as f:
+                    f.write(line)
+    """), path="store.py")
+    assert "MS301" in codes(findings)
+
+
+def test_ms303_truncating_rewrite():
+    findings = check_lock_source(textwrap.dedent("""
+        import fcntl
+
+        class Store:
+            def _flocked(self):
+                f = open(self.path, "a")
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                return f
+
+            def rewrite(self, lines):
+                with self._flocked():
+                    with open(self.path, "w") as f:
+                        f.writelines(lines)
+    """), path="store.py")
+    assert "MS303" in codes(findings)
+
+
+def test_locked_append_is_clean():
+    findings = check_lock_source(textwrap.dedent("""
+        import fcntl
+
+        class Store:
+            def _flocked(self):
+                f = open(self.path, "a")
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+                return f
+
+            def put(self, line):
+                with self._flocked() as f:
+                    f.write(line)
+    """), path="store.py")
+    assert findings == []
+
+
+def test_lock_targets_exist_and_are_clean():
+    # regression: TrialCache.put now flocks its append (MS301) and ledger
+    # rewrites go through temp+fsync+replace (MS303)
+    findings = check_lock_discipline(root=REPO)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_serve_prefill_sync_regression():
+    # regression: serve() must sync BOTH prefill outputs (MS206) and the
+    # decode loop tail (MS201)
+    findings = lint_file(REPO / "src" / "repro" / "launch" / "serve.py")
+    assert filter_suppressed(findings) == []
+
+
+# ---------------------------------------------------------------------------
+# Finding plumbing
+# ---------------------------------------------------------------------------
+
+def test_all_emitted_codes_are_registered():
+    assert set(CODES) >= {"MS100", "MS101", "MS102", "MS103", "MS104",
+                          "MS201", "MS202", "MS203", "MS204", "MS205",
+                          "MS206", "MS301", "MS302", "MS303"}
+
+
+def test_worst_severity_ordering():
+    assert worst_severity([]) is None
+    findings = run_lint("""
+        import numpy as np
+
+        def data(n):
+            return np.random.rand(n)
+    """)
+    assert worst_severity(findings) == "warning"
+
+
+# ---------------------------------------------------------------------------
+# CLI contract (scripts/lint.py)
+# ---------------------------------------------------------------------------
+
+BROKEN_FIXTURE = textwrap.dedent("""
+    import time
+    import numpy as np
+    import jax.numpy as jnp
+
+    def bench(a, b):
+        x = np.random.rand(4)
+        t0 = time.time()
+        c = jnp.dot(a, b)
+        return time.time() - t0
+""")
+
+
+def run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint.py"), *argv],
+        capture_output=True, text=True, timeout=120)
+
+
+def test_cli_json_reports_exact_codes(tmp_path):
+    fixture = tmp_path / "broken.py"
+    fixture.write_text(BROKEN_FIXTURE)
+    proc = run_cli("--no-trace", "--json", str(fixture))
+    assert proc.returncode == 1, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["lint_version"] == LINT_VERSION
+    got = sorted(f["code"] for f in doc["findings"])
+    # both time.time() calls (opening and closing the region) fire MS202
+    assert got == ["MS201", "MS202", "MS202", "MS205"]
+    assert doc["summary"]["error"] == 0
+    assert doc["summary"]["warning"] == 4
+    for f in doc["findings"]:
+        assert set(f) >= {"code", "path", "line", "message", "severity",
+                          "pass"}
+
+
+def test_cli_clean_fixture_exits_zero(tmp_path):
+    fixture = tmp_path / "clean.py"
+    fixture.write_text("x = 1\n")
+    proc = run_cli("--no-trace", "--json", str(fixture))
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["findings"] == []
+
+
+def test_cli_missing_path_is_usage_error(tmp_path):
+    proc = run_cli("--no-trace", str(tmp_path / "nope"))
+    assert proc.returncode == 2
+
+
+@pytest.mark.slow
+def test_cli_repo_tree_is_clean():
+    # the blocking CI gate: the repo's own sources must lint clean
+    proc = run_cli("--no-trace")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — workload audit (traces jax kernels)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def jnp():
+    return pytest.importorskip("jax.numpy")
+
+
+@pytest.mark.trace
+def test_ms101_wrong_declared_work(jnp):
+    import jax
+
+    from repro.lint import WorkloadSpec, audit_workload
+    spec = WorkloadSpec(
+        fn=jnp.dot,
+        args=(jax.ShapeDtypeStruct((8, 8), jnp.float32),
+              jax.ShapeDtypeStruct((8, 8), jnp.float32)),
+        work=8.0 * 8 * 8,     # forgot the factor of 2
+        unit="flops", dtype="float32", name="bad-dgemm")
+    assert "MS101" in codes(audit_workload(spec))
+
+
+@pytest.mark.trace
+def test_ms102_dead_kernel(jnp):
+    import jax
+
+    from repro.lint import WorkloadSpec, audit_workload
+
+    def dead(x):
+        return jnp.float32(0.0)
+
+    spec = WorkloadSpec(
+        fn=dead, args=(jax.ShapeDtypeStruct((128,), jnp.float32),),
+        work=128.0, unit="flops", dtype="float32", name="dead")
+    assert "MS102" in codes(audit_workload(spec))
+
+
+@pytest.mark.trace
+def test_ms103_dtype_mismatch(jnp):
+    import jax
+
+    from repro.lint import WorkloadSpec, audit_workload
+    spec = WorkloadSpec(
+        fn=jnp.dot,
+        args=(jax.ShapeDtypeStruct((8, 8), jnp.float32),
+              jax.ShapeDtypeStruct((8, 8), jnp.float32)),
+        work=2.0 * 8 * 8 * 8,
+        unit="flops", dtype="float64", name="not-actually-f64")
+    assert "MS103" in codes(audit_workload(spec))
+
+
+@pytest.mark.trace
+def test_correct_declaration_is_clean(jnp):
+    import jax
+
+    from repro.lint import WorkloadSpec, audit_workload
+    spec = WorkloadSpec(
+        fn=jnp.dot,
+        args=(jax.ShapeDtypeStruct((16, 4), jnp.float32),
+              jax.ShapeDtypeStruct((4, 8), jnp.float32)),
+        work=2.0 * 16 * 8 * 4,
+        unit="flops", dtype="float32", name="good-dgemm")
+    assert audit_workload(spec) == []
+
+
+@pytest.mark.trace
+def test_registered_benchmarks_audit_clean():
+    # the benchmarks the CLI gates on must stay truthfully declared
+    from benchmarks.common import AUDITED_WORKLOADS
+
+    from repro.lint import audit_benchmark
+    findings = []
+    for name, (bench, cfg) in AUDITED_WORKLOADS.items():
+        findings += [f for f in audit_benchmark(bench, cfg, name=name)
+                     if f.severity != "info"]
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# Tuner pre-run audit hook
+# ---------------------------------------------------------------------------
+
+def _mis_declared_benchmark(jnp, calls):
+    import jax
+
+    from repro.lint import WorkloadSpec
+
+    def bench(cfg):
+        def factory():
+            calls.append(cfg)
+            return lambda: 1.0
+        return factory
+
+    def spec(cfg):
+        n = cfg["x"] + 8
+        return WorkloadSpec(
+            fn=jnp.dot,
+            args=(jax.ShapeDtypeStruct((n, n), jnp.float32),
+                  jax.ShapeDtypeStruct((n, n), jnp.float32)),
+            work=float(n),          # wildly under-declared
+            unit="flops", dtype="float32", name=f"mis[{n}]")
+
+    bench.audit_spec = spec
+    return bench
+
+
+@pytest.fixture
+def tuning_bits():
+    from repro.core import EvaluationSettings
+    from repro.core.searchspace import grid
+    from repro.core.tuner import Tuner
+    settings = EvaluationSettings(max_invocations=1, max_iterations=1,
+                                  max_time_s=5.0)
+    return Tuner(grid(x=(0, 1)), settings)
+
+
+@pytest.mark.trace
+def test_tuner_strict_raises_before_any_trial(jnp, tuning_bits):
+    calls = []
+    bench = _mis_declared_benchmark(jnp, calls)
+    with pytest.raises(WorkloadAuditError) as exc:
+        tuning_bits.tune(bench, validate="strict")
+    assert calls == []             # no measurement time was burned
+    assert "MS101" in codes(exc.value.findings)
+
+
+@pytest.mark.trace
+def test_tuner_warn_default_warns_and_proceeds(jnp, tuning_bits):
+    calls = []
+    bench = _mis_declared_benchmark(jnp, calls)
+    with pytest.warns(WorkloadAuditWarning, match="MS101"):
+        result = tuning_bits.tune(bench)    # validate="warn" is default
+    assert calls                            # the run still happened
+    assert result.best_config is not None
+
+
+@pytest.mark.trace
+def test_tuner_validate_off_is_silent(jnp, tuning_bits, recwarn):
+    calls = []
+    bench = _mis_declared_benchmark(jnp, calls)
+    tuning_bits.tune(bench, validate="off")
+    assert calls
+    assert [w for w in recwarn.list
+            if issubclass(w.category, WorkloadAuditWarning)] == []
+
+
+def test_tuner_rejects_unknown_validate_mode(tuning_bits):
+    with pytest.raises(ValueError, match="validate"):
+        tuning_bits.tune(lambda cfg: lambda: (lambda: 1.0),
+                         validate="sometimes")
+
+
+def test_tuner_warn_mode_survives_broken_audit_spec(tuning_bits):
+    # audit machinery failures must not abort a warn-mode run
+    def bench(cfg):
+        def factory():
+            return lambda: 1.0
+        return factory
+
+    bench.audit_spec = "not callable"
+    with pytest.warns(WorkloadAuditWarning, match="MS104"):
+        result = tuning_bits.tune(bench)
+    assert result.best_config is not None

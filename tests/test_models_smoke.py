@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced same-family configs, one train
 step on CPU, shape + finiteness asserts, prefill/decode consistency."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,6 @@ import pytest
 from repro import configs
 from repro.models import api
 from repro.models import params as P
-from repro.models.config import WorkloadShape
 from repro.models.transformer import StepConfig
 
 STEP = StepConfig(remat=False, loss_chunk=8)

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.params import ParamDef, materialize
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,

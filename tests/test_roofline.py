@@ -2,11 +2,9 @@
 
 import math
 
-import pytest
 
 from repro.analysis.hlo import parse_collectives
-from repro.core.roofline import (TPU_V5E, TRIAD_INTENSITY, MachineSpec,
-                                 RooflineModel, attainable,
+from repro.core.roofline import (TPU_V5E, TRIAD_INTENSITY, attainable,
                                  from_measurements, operational_intensity,
                                  ridge_point)
 

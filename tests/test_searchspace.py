@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.core.searchspace import (SearchSpace, doubling_from, grid, param,
+from repro.core.searchspace import (doubling_from, grid, param,
                                     powers_of_two)
 
 

@@ -1,8 +1,6 @@
 """Semantics of the paper's four stop conditions."""
 
-import math
 
-import pytest
 
 import repro.core.welford as W
 from repro.core.stop_conditions import (CIConverged, Direction, EvalContext,

@@ -2,7 +2,6 @@
 successive-halving parity with the legacy loop, process-pool picklability,
 and transfer-tuning seeds (unit + CLI subprocess)."""
 
-import dataclasses
 import os
 import pathlib
 import subprocess

@@ -12,7 +12,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import (Direction, EvaluationSettings, Tuner, from_measurements,
+from repro.core import (EvaluationSettings, Tuner, from_measurements,
                         grid, standard_techniques)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

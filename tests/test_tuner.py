@@ -1,8 +1,6 @@
 """End-to-end autotuner behaviour: the paper's technique grid on synthetic
 objectives with known optima."""
 
-import numpy as np
-import pytest
 
 from repro.core.evaluator import EvaluationSettings
 from repro.core.searchspace import grid
