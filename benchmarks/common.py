@@ -7,6 +7,7 @@ plus richer per-table output to stderr-safe stdout sections.
 from __future__ import annotations
 
 import itertools
+import math
 from typing import Callable
 
 import jax
@@ -163,6 +164,126 @@ def synthetic_benchmark(cfg: dict) -> Callable:
     return factory
 
 
+# ---------------------------------------------------------------------------
+# Shape-sweep families (repro.sweep): shape -> benchmark factory
+# ---------------------------------------------------------------------------
+#
+# A *family* specializes the objective to one problem shape; the sweep
+# campaign calls it once per grid point. Family closures capture the shape
+# (not picklable) — drive campaigns with the serial or thread backend.
+
+#: shared tile ladder of the sweep config space (powers of two, so every
+#: k_chunk divides every power-of-two K)
+SWEEP_TILES = (16, 32, 64, 128, 256, 512)
+
+
+def gemm_shape_space(quick: bool = True) -> SearchSpace:
+    """The (M, N[, K]) shape grid a sweep campaign tunes: a 3×3 grid of
+    the paper's host-scaled DGEMM dims for CI, the full power-of-two
+    ladder (with K) otherwise."""
+    if quick:
+        return grid(m=(256, 512, 1024), n=(256, 512, 1024))
+    return grid(m=powers_of_two(256, 4096), n=powers_of_two(256, 4096),
+                k=powers_of_two(64, 1024))
+
+
+def sweep_config_space() -> SearchSpace:
+    """Per-shape tunables shared by the sweep families."""
+    return grid(bm=SWEEP_TILES, bn=SWEEP_TILES)
+
+
+def synthetic_gemm_family(shape: dict) -> Callable:
+    """Instant shape-conditioned objective for sweep mechanics tests.
+
+    The optimal (bm, bn) tile *level* moves linearly with the shape's
+    position on the (log-scale) 256..1024 ladder, and the score is
+    quadratic around it — so in the joint encoder's features (config
+    level index × log-normalized shape coordinate, both linear) the whole
+    surface is exactly degree-2. The ridge surrogate can therefore
+    represent it exactly, which makes oracle-interpolation acceptance
+    tests sharp: any gap to the true optimum is a harness bug, not model
+    bias. Peak score is 100 when the ideal tile lands on a ladder level.
+    """
+    levels = {v: i for i, v in enumerate(SWEEP_TILES)}
+    top = len(SWEEP_TILES) - 1
+
+    def ideal(dim_value: float, lo: float = 256.0, hi: float = 1024.0):
+        t = (math.log(dim_value) - math.log(lo)) / (math.log(hi)
+                                                    - math.log(lo))
+        return top * min(max(t, 0.0), 1.0)
+
+    ia, ib = ideal(shape["m"]), ideal(shape.get("n", shape["m"]))
+
+    def bench(cfg: dict) -> Callable:
+        mu = (100.0 - (levels[cfg["bm"]] - ia) ** 2
+              - 0.5 * (levels[cfg["bn"]] - ib) ** 2)
+
+        def factory():
+            return lambda: mu
+
+        return factory
+
+    return bench
+
+
+def chunked_dgemm_kernel(a3, b3):
+    """DGEMM with the K axis pre-split into (chunks, k_chunk) — one
+    einsum contracting both: identical 2·M·N·K flops to ``jnp.dot``,
+    different loop/layout structure (the tunable). Shared between the
+    timed factory and the workload audit."""
+    return jnp.einsum("mck,ckn->mn", a3, b3)
+
+
+def chunked_dgemm_family(shape: dict) -> Callable:
+    """Real measured DGEMM family: C = A·B with A's K axis split into
+    ``k_chunk``-wide chunks (snapped down to K when larger). Scores are
+    GFLOP/s over the same useful work regardless of chunking, so configs
+    compare on time alone."""
+    m, n, k = shape["m"], shape["n"], shape.get("k", 256)
+    flops = dgemm_flops(m, n, k)
+
+    def bench(cfg: dict) -> Callable:
+        kc = min(cfg["k_chunk"], k)
+        chunks = k // kc
+        invocation = itertools.count()
+
+        def factory():
+            seed = (m * 1_000_003 + n * 10_007 + k * 101 + kc * 13
+                    + next(invocation)) % (2 ** 31)
+            key = jax.random.key(seed)
+            a = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (m, chunks, kc), jnp.float32)
+            b = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (chunks, kc, n), jnp.float32)
+            f = jax.jit(chunked_dgemm_kernel)
+            jax.block_until_ready(f(a, b))      # pre-heat
+
+            def run():
+                jax.block_until_ready(f(a, b))
+
+            return timed_sampler(run, work=flops / 1e9)  # GFLOP/s
+
+        return factory
+
+    def sweep_audit_spec(cfg: dict) -> WorkloadSpec:
+        kc = min(cfg["k_chunk"], k)
+        chunks = k // kc
+        return WorkloadSpec(
+            fn=chunked_dgemm_kernel,
+            args=(jax.ShapeDtypeStruct((m, chunks, kc), jnp.float32),
+                  jax.ShapeDtypeStruct((chunks, kc, n), jnp.float32)),
+            work=flops, unit="flops", dtype="float32",
+            name=f"dgemm_sweep[{m}x{n}x{k}/kc{kc}]")
+
+    bench.audit_spec = sweep_audit_spec
+    return bench
+
+
+def sweep_chunk_space(k_max: int = 512) -> SearchSpace:
+    """Config space of :func:`chunked_dgemm_family`."""
+    return grid(k_chunk=powers_of_two(16, k_max))
+
+
 # -- workload audit declarations (repro.lint pass 1) ------------------------
 
 def dgemm_audit_spec(cfg: dict) -> WorkloadSpec:
@@ -196,4 +317,8 @@ AUDITED_WORKLOADS: dict[str, tuple[Callable, dict]] = {
     "dgemm": (dgemm_benchmark, {"n": 256, "m": 256, "k": 64}),
     "triad": (triad_benchmark, {"n_bytes": 1 << 20}),
     "synthetic": (synthetic_benchmark, {"x": 7}),
+    # one representative shape of the sweep family: the audit traces the
+    # chunked kernel and must see exactly the 2mnk flops it declares
+    "dgemm_sweep": (chunked_dgemm_family({"m": 256, "n": 256, "k": 256}),
+                    {"k_chunk": 64}),
 }

@@ -28,7 +28,23 @@ else
 fi
 
 echo "== tier-1 pytest =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+# coverage rides along when pytest-cov is installed (the reference
+# container has none; the CI coverage job pins it) — same single pytest
+# pass either way, and the threshold below only reports, never blocks
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        --cov=repro --cov-report=xml --cov-report=term
+    python - <<'EOF'
+import xml.etree.ElementTree as ET
+rate = float(ET.parse("coverage.xml").getroot().get("line-rate"))
+target = 0.80
+mark = "meets" if rate >= target else "is below"
+print(f"line coverage {rate:.1%} {mark} the {target:.0%} target "
+      "(non-blocking)")
+EOF
+else
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+fi
 
 echo "== doc snippets =="
 python scripts/check_docs.py

@@ -247,10 +247,14 @@ class TrialCache:
             return len(self._entries)
 
     # -- query layer (reporting) ----------------------------------------------
-    def benchmarks(self) -> list[str]:
-        """Benchmark names with at least one cached trial, sorted."""
+    def benchmarks(self, prefix: Optional[str] = None) -> list[str]:
+        """Benchmark names with at least one cached trial, sorted. With
+        ``prefix``, only names starting with it — how the sweep layer
+        finds every per-shape benchmark of one campaign
+        (``"<base>@" + shape_key``, see :mod:`repro.sweep.shapes`)."""
         with self._lock:
-            return sorted({bench for bench, _ in self._latest})
+            return sorted({bench for bench, _ in self._latest
+                           if prefix is None or bench.startswith(prefix)})
 
     def items(self, benchmark: Optional[str] = None,
               ) -> list[tuple[str, Config, EvalResult]]:
@@ -542,13 +546,17 @@ class TuningSession:
                  warm_start: bool = True,
                  fingerprint: Optional[str] = None,
                  benchmark_name: Optional[str] = None,
-                 ledger=AUTO_LEDGER):
+                 ledger=AUTO_LEDGER,
+                 campaign: Optional[str] = None):
         self.name = name
         self.tuner = tuner
         self.benchmark = benchmark
         # distinct cache namespace per objective: a session file reused with
         # a different benchmark must not warm-start across metrics
         self.benchmark_name = benchmark_name or name
+        # sweep campaigns stamp their name on every ledger record so one
+        # grid-tuning pass is recognizable as a unit in history tooling
+        self.campaign = campaign
         self.warm_start = warm_start
         self.cache = TrialCache(Path(cache_dir) / f"{name}.jsonl",
                                 fingerprint=fingerprint)
@@ -574,7 +582,8 @@ class TuningSession:
         if self.ledger is not None:
             bound_ledger = self.ledger.bound(self.benchmark_name,
                                              self.cache.fingerprint,
-                                             session=self.name)
+                                             session=self.name,
+                                             campaign=self.campaign)
         return self.tuner.tune(self.benchmark, progress=progress,
                                backend=backend,
                                cache=self.cache.bound(self.benchmark_name),

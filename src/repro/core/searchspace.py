@@ -96,6 +96,11 @@ class SearchSpace:
 
     # -- enumeration ----------------------------------------------------------
     @property
+    def names(self) -> tuple[str, ...]:
+        """Parameter names in declaration order."""
+        return tuple(p.name for p in self.params)
+
+    @property
     def raw_cardinality(self) -> int:
         """|S| before constraint filtering (the paper's Eq. 8 number)."""
         n = 1

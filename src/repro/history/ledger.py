@@ -67,6 +67,7 @@ class RunRecord:
     n_trials: int = 0              # trials the session evaluated (incl. cached)
     total_samples: int = 0         # samples across the whole session
     session: Optional[str] = None  # TuningSession name, when one ran it
+    campaign: Optional[str] = None  # sweep campaign name, when one ran it
     timestamp: Optional[float] = None   # caller-supplied epoch seconds
 
     @property
@@ -84,6 +85,7 @@ def record_from_result(benchmark: str, fingerprint: str, result,
                        session: Optional[str] = None,
                        timestamp: Optional[float] = None,
                        direction: Direction = Direction.MAXIMIZE,
+                       campaign: Optional[str] = None,
                        ) -> Optional[RunRecord]:
     """Distill a :class:`~repro.core.tuner.TuningResult` into a run record
     (run index 0 — :meth:`RunLedger.append` assigns the real one).
@@ -115,7 +117,7 @@ def record_from_result(benchmark: str, fingerprint: str, result,
         direction=direction.value,
         n_trials=len(result.trials),
         total_samples=result.total_samples,
-        session=session, timestamp=timestamp)
+        session=session, campaign=campaign, timestamp=timestamp)
 
 
 def _record_to_json(rec: RunRecord) -> dict:
@@ -126,7 +128,8 @@ def _record_to_json(rec: RunRecord) -> dict:
          "invocation_means": list(rec.invocation_means),
          "direction": rec.direction,
          "n_trials": rec.n_trials, "total_samples": rec.total_samples}
-    for field in ("strategy", "settings_key", "session", "timestamp"):
+    for field in ("strategy", "settings_key", "session", "campaign",
+                  "timestamp"):
         value = getattr(rec, field)
         if value is not None:
             d[field] = value
@@ -143,7 +146,8 @@ def _record_from_json(d: dict) -> RunRecord:
         direction=d.get("direction", Direction.MAXIMIZE.value),
         n_trials=int(d.get("n_trials", 0)),
         total_samples=int(d.get("total_samples", 0)),
-        session=d.get("session"), timestamp=d.get("timestamp"))
+        session=d.get("session"), campaign=d.get("campaign"),
+        timestamp=d.get("timestamp"))
 
 
 def iter_runs(path: str | os.PathLike) -> Iterator[RunRecord]:
@@ -361,13 +365,14 @@ class RunLedger:
                       session: Optional[str] = None,
                       timestamp: Optional[float] = None,
                       direction: Direction = Direction.MAXIMIZE,
+                      campaign: Optional[str] = None,
                       ) -> Optional[RunRecord]:
         """Distill and append a :class:`TuningResult`; returns the stored
         record, or ``None`` when the result has no incumbent."""
         rec = record_from_result(benchmark, fingerprint, result,
                                  settings_key=settings_key,
                                  session=session, timestamp=timestamp,
-                                 direction=direction)
+                                 direction=direction, campaign=campaign)
         return self.append(rec) if rec is not None else None
 
     def backfill(self, cache, session: Optional[str] = None,
@@ -415,8 +420,10 @@ class RunLedger:
         return added
 
     def bound(self, benchmark: str, fingerprint: str,
-              session: Optional[str] = None) -> "BoundLedger":
-        return BoundLedger(self, benchmark, fingerprint, session=session)
+              session: Optional[str] = None,
+              campaign: Optional[str] = None) -> "BoundLedger":
+        return BoundLedger(self, benchmark, fingerprint, session=session,
+                           campaign=campaign)
 
 
 class BoundLedger:
@@ -425,11 +432,13 @@ class BoundLedger:
     ``BoundCache``)."""
 
     def __init__(self, ledger: RunLedger, benchmark: str, fingerprint: str,
-                 session: Optional[str] = None):
+                 session: Optional[str] = None,
+                 campaign: Optional[str] = None):
         self.ledger = ledger
         self.benchmark = benchmark
         self.fingerprint = fingerprint
         self.session = session
+        self.campaign = campaign
 
     def record(self, result, settings_key: Optional[str] = None,
                timestamp: Optional[float] = None,
@@ -438,7 +447,8 @@ class BoundLedger:
         return self.ledger.record_result(
             self.benchmark, self.fingerprint, result,
             settings_key=settings_key, session=self.session,
-            timestamp=timestamp, direction=direction)
+            timestamp=timestamp, direction=direction,
+            campaign=self.campaign)
 
     def series(self) -> list[RunRecord]:
         return self.ledger.series(self.benchmark, self.fingerprint)

@@ -65,6 +65,15 @@ class Surrogate:
     def observe(self, x: np.ndarray, y: float) -> None:
         raise NotImplementedError
 
+    def observe_many(self, X: np.ndarray, y) -> None:
+        """Fold a batch of (x, y) pairs into the model — how prior
+        observations (cached trials of sibling shapes, see
+        :class:`~repro.sweep.strategy.SweepStrategy`) warm a fresh
+        surrogate before its first ask."""
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        for x, yi in zip(X, y):
+            self.observe(x, float(yi))
+
     def predict(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """(mean, std) per row of ``X``, in original target units."""
         raise NotImplementedError

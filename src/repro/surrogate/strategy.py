@@ -99,17 +99,44 @@ class SurrogateStrategy(SearchStrategy):
         self.acquisition = acquisition
         self.seed = seed
 
+    # -- subclass hooks (the sweep layer re-targets these) -------------------
+    def _make_encoder(self, space: SearchSpace) -> SpaceEncoder:
+        """The feature encoder ``reset`` installs. Subclasses may return
+        an encoder over a *wider* feature space (e.g. joint shape×config,
+        :class:`~repro.sweep.strategy.SweepStrategy`) as long as
+        :meth:`_encode` agrees with it."""
+        return SpaceEncoder(space)
+
+    def _encode(self, config: Config) -> np.ndarray:
+        """Feature vector of one config under the installed encoder."""
+        return self._encoder.encode(config)
+
+    def _prior_observations(self):
+        """(x, y) pairs fed to the surrogate at reset, before any trial of
+        this run — empty by default. Subclasses yield transfer knowledge
+        here (cached trials of sibling shapes under the same hardware
+        fingerprint); a warmed model skips the random-exploration phase
+        and shrinks the default initial design to a local anchor."""
+        return ()
+
     def reset(self, space: SearchSpace, settings: EvaluationSettings,
               seeds: Sequence[Config] = ()) -> None:
         self._direction: Direction = settings.direction
         self._confidence = settings.confidence
         self._xi = settings.rel_margin
-        self._encoder = SpaceEncoder(space)
+        self._encoder = self._make_encoder(space)
         self._configs = space.ordered("exhaustive")
-        self._X = self._encoder.encode_all(self._configs)
+        self._X = (np.stack([self._encode(c) for c in self._configs])
+                   if self._configs
+                   else np.zeros((0, self._encoder.dim), dtype=np.float64))
         self._index = {config_key(c): i for i, c in enumerate(self._configs)}
         self._surrogate = make_surrogate(self.model, self._encoder.dim,
                                          len(self._configs))
+        priors = list(self._prior_observations())
+        if priors:
+            self._surrogate.observe_many(
+                np.stack([x for x, _ in priors]), [y for _, y in priors])
+        self._n_priors = len(priors)
         self._rng = np.random.default_rng(
             self.seed if self.seed is not None else 0)
         self._unproposed = set(range(len(self._configs)))
@@ -126,8 +153,15 @@ class SurrogateStrategy(SearchStrategy):
             if i is not None and i not in seen:
                 seen.add(i)
                 seed_idx.append(i)
-        want = self.n_init if self.n_init is not None \
-            else max(3, 2 * self._encoder.dim + 1)
+        if self.n_init is not None:
+            want = self.n_init
+        elif self._n_priors:
+            # the priors already identify the model: two fresh anchor
+            # points re-ground it in this run's own measurements and the
+            # acquisition takes over
+            want = 2
+        else:
+            want = max(3, 2 * self._encoder.dim + 1)
         pool = sorted(self._unproposed - seen)
         fill = max(0, want - len(seed_idx))
         if fill and pool:
@@ -213,7 +247,7 @@ class SurrogateStrategy(SearchStrategy):
         # condition 4 *most* trials are pruned — discarding them would
         # starve the surrogate. They are only barred from selection: a
         # truncated estimate never becomes the incumbent reference.
-        x = self._X[i] if i is not None else self._encoder.encode(config)
+        x = self._X[i] if i is not None else self._encode(config)
         self._surrogate.observe(x, result.score)
         if result.pruned:
             return

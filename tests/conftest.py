@@ -2,10 +2,56 @@
 must see the host's real (single) device; only launch/dryrun.py forces the
 512-device placeholder topology (and tests exercise it via subprocess)."""
 
+import os
+import pathlib
+
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/* from the current output instead of "
+             "comparing (equivalent to REGEN_GOLDEN=1); updated tests "
+             "report as skipped so a regeneration run is never mistaken "
+             "for a green comparison run")
+
+
+class GoldenChecker:
+    """Byte-compares rendered text against ``tests/golden/<name>``.
+
+    In update mode the golden file is rewritten and the test *skips* —
+    docs/history.md documents the workflow. Call it through the
+    ``golden`` fixture: ``golden("dashboard.html", html)``.
+    """
+
+    def __init__(self, update: bool):
+        self.update = update
+
+    def __call__(self, name: str, text: str) -> None:
+        golden = GOLDEN_DIR / name
+        if self.update:
+            golden.parent.mkdir(parents=True, exist_ok=True)
+            golden.write_text(text, encoding="utf-8")
+            pytest.skip(f"regenerated {golden}")
+        assert golden.exists(), \
+            f"missing golden file {golden}; run pytest --update-golden"
+        assert text == golden.read_text(encoding="utf-8"), \
+            f"{name} drifted from golden; pytest --update-golden if intentional"
+
+
+@pytest.fixture
+def golden(request):
+    """Golden-file checker honoring ``--update-golden`` (and the legacy
+    ``REGEN_GOLDEN=1`` environment switch)."""
+    update = (request.config.getoption("--update-golden")
+              or bool(os.environ.get("REGEN_GOLDEN")))
+    return GoldenChecker(update)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,163 @@
+"""Statistical conformance: the paper's confidence machinery checked as
+*statistics*, not as code paths — seeded Monte-Carlo over synthetic
+streams with known ground truth.
+
+Three contracts (ISSUE acceptance):
+
+  * coverage — the 95% ``ci_mean`` interval contains the true mean in at
+    least ~93% of 500 independent normal streams (t-correction keeps the
+    small-sample coverage honest);
+  * false positives — on *flat* data (identical true means), the Welch
+    interval excludes zero at roughly its nominal rate, and the
+    ``compare_runs`` verdict (99% CI **and** the 2% minimum-effect gate)
+    stays under a 5% false-positive rate;
+  * prune safety — stop-condition-4 pruning never discards a config
+    whose true mean beats the incumbent by more than the 2% margin the
+    paper's early-termination discipline allows.
+
+Everything is seeded: a failure here is a real calibration bug, not a
+flaky draw.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Direction, EvaluationSettings
+from repro.core.confidence import ci_mean
+from repro.core.evaluator import Evaluator
+from repro.core.welford import from_samples
+from repro.history.ledger import RunRecord
+from repro.history.regression import compare_runs, welch_interval
+
+N_STREAMS = 500
+TRUE_MEAN = 100.0
+SD = 5.0
+
+
+def _record(samples, run=0) -> RunRecord:
+    st = from_samples(samples)
+    return RunRecord(benchmark="conf", fingerprint="host", run=run,
+                     config={"x": 1}, score=float(st.mean),
+                     count=float(st.count), mean=float(st.mean),
+                     m2=float(st.m2))
+
+
+# ------------------------------------------------------------------ coverage
+
+def test_ci_mean_95_coverage_over_500_streams():
+    rng = np.random.default_rng(1234)
+    hits = 0
+    for _ in range(N_STREAMS):
+        xs = rng.normal(TRUE_MEAN, SD, size=15)
+        iv = ci_mean(from_samples(xs), confidence=0.95, use_t=True)
+        hits += iv.lo <= TRUE_MEAN <= iv.hi
+    coverage = hits / N_STREAMS
+    assert 0.93 <= coverage <= 0.985, coverage
+
+
+def test_ci_mean_without_t_undercovers_small_samples():
+    """The z interval (the paper's n>=30 shortcut) must never cover
+    *more* than the t interval it approximates — the t-correction is the
+    conservative one."""
+    rng = np.random.default_rng(99)
+    z_hits = t_hits = 0
+    for _ in range(N_STREAMS):
+        xs = rng.normal(TRUE_MEAN, SD, size=5)
+        st = from_samples(xs)
+        z = ci_mean(st, confidence=0.95, use_t=False)
+        t = ci_mean(st, confidence=0.95, use_t=True)
+        assert z.hi - z.lo <= t.hi - t.lo
+        z_hits += z.lo <= TRUE_MEAN <= z.hi
+        t_hits += t.lo <= TRUE_MEAN <= t.hi
+    assert z_hits <= t_hits
+
+
+# ------------------------------------------------------- false-positive rate
+
+def test_welch_interval_flat_data_nominal_rate():
+    """Two streams with the *same* true mean: the 95% Welch interval for
+    their difference should exclude zero at roughly the nominal 5% —
+    neither badly anticonservative (>9%) nor uselessly wide (<1%)."""
+    rng = np.random.default_rng(4321)
+    fp = 0
+    n_pairs = 400
+    for _ in range(n_pairs):
+        a = from_samples(rng.normal(50.0, 3.0, size=20))
+        b = from_samples(rng.normal(50.0, 3.0, size=20))
+        iv = welch_interval(a, b, confidence=0.95)
+        fp += iv.lo > 0.0 or iv.hi < 0.0
+    rate = fp / n_pairs
+    assert 0.01 <= rate <= 0.09, rate
+
+
+def test_compare_runs_flat_verdict_false_positive_rate():
+    """The regression-gate verdict stacks a 99% CI on a 2% minimum
+    effect; on flat data fewer than 5% of comparisons may come out
+    non-flat (ISSUE: Welch regression verdict FPR under 5%)."""
+    rng = np.random.default_rng(2026)
+    n_pairs = 400
+    wrong = 0
+    for i in range(n_pairs):
+        base = _record(rng.normal(50.0, 1.5, size=20), run=0)
+        cand = _record(rng.normal(50.0, 1.5, size=20), run=1)
+        cmp = compare_runs(base, cand, direction=Direction.MAXIMIZE)
+        assert cmp.method == "welch"
+        wrong += cmp.verdict != "flat"
+    assert wrong / n_pairs < 0.05, wrong / n_pairs
+
+
+def test_compare_runs_detects_a_real_shift():
+    """Complement of the FPR test — a genuine 10% drop must not read as
+    flat (the gate has power, it is not vacuously conservative)."""
+    rng = np.random.default_rng(7)
+    base = _record(rng.normal(50.0, 1.0, size=30), run=0)
+    cand = _record(rng.normal(45.0, 1.0, size=30), run=1)
+    cmp = compare_runs(base, cand, direction=Direction.MAXIMIZE)
+    assert cmp.verdict == "regressed"
+
+
+# ------------------------------------------------------------- prune safety
+
+# min_count_inner=5, not the 2 the engine permits: a 2-sample t-interval
+# collapses to a point when the draws nearly coincide, and at the 2.5%
+# margin that falsely prunes ~2% of genuinely-better configs. Five
+# samples (the same floor as min_count_ci and MIN_COUNT_WELCH) is the
+# documented safe operating point — docs/sweeps.md and docs/history.md.
+PRUNE_SETTINGS = EvaluationSettings(max_invocations=5, max_iterations=20,
+                                    max_time_s=10.0, use_inner_prune=True,
+                                    min_count_inner=5,
+                                    direction=Direction.MAXIMIZE)
+INCUMBENT = 100.0
+
+
+def _stream(rng, mu, rel_sd=0.03):
+    def make_invocation():
+        return lambda: float(rng.normal(mu, rel_sd * mu))
+    return make_invocation
+
+
+@pytest.mark.parametrize("eps", [0.025, 0.04, 0.08])
+def test_prune_never_discards_true_improvements(eps):
+    """Stop-condition 4 discards a config only when its CI upper bound
+    falls below the incumbent; a config whose *true* mean beats the
+    incumbent by more than the 2% margin must survive every time."""
+    rng = np.random.default_rng(int(eps * 1000))
+    mu = INCUMBENT * (1.0 + eps)
+    pruned = 0
+    for _ in range(100):
+        ev = Evaluator(PRUNE_SETTINGS)
+        res = ev.evaluate(_stream(rng, mu), incumbent=INCUMBENT)
+        pruned += res.pruned
+    assert pruned == 0, f"{pruned}/100 true improvements pruned (eps={eps})"
+
+
+def test_prune_does_fire_on_clearly_worse_configs():
+    """...and the guarantee is not vacuous: a config 50% below the
+    incumbent is pruned essentially always."""
+    rng = np.random.default_rng(5)
+    pruned = 0
+    for _ in range(50):
+        ev = Evaluator(PRUNE_SETTINGS)
+        res = ev.evaluate(_stream(rng, INCUMBENT * 0.5), incumbent=INCUMBENT)
+        pruned += res.pruned
+    assert pruned == 50, f"only {pruned}/50 clearly-worse configs pruned"

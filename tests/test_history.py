@@ -4,7 +4,7 @@ Covers the acceptance flow end to end: two synthetic tuning sessions on
 one fingerprint populate the ledger, an injected slowdown makes
 ``scripts/perf_gate.py`` exit non-zero with a CI-backed verdict while a
 flat rerun passes, and the HTML renderer matches a golden snapshot
-(regenerate intentionally-changed goldens with ``REGEN_GOLDEN=1``).
+(regenerate intentionally-changed goldens with ``pytest --update-golden``).
 """
 
 import os
@@ -26,7 +26,6 @@ from repro.history import (RunLedger, ascii_sparkline, compare_runs,
 from repro.history.ledger import RunRecord, iter_runs, record_from_result
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
 
 SETTINGS = EvaluationSettings(max_invocations=2, max_iterations=10,
                               use_ci_convergence=True, use_inner_prune=True,
@@ -422,18 +421,6 @@ def test_render_trend_text():
     assert render_trend_text([]) == "(no history yet)"
 
 
-def _assert_matches_golden(name, text):
-    golden = GOLDEN_DIR / name
-    if os.environ.get("REGEN_GOLDEN"):
-        golden.parent.mkdir(parents=True, exist_ok=True)
-        golden.write_text(text, encoding="utf-8")
-        pytest.skip(f"regenerated {golden}")
-    assert golden.exists(), \
-        f"missing golden file {golden}; run with REGEN_GOLDEN=1"
-    assert text == golden.read_text(encoding="utf-8"), \
-        f"{name} drifted from golden; REGEN_GOLDEN=1 if intentional"
-
-
 def _make_eval_result(score, spreads=(1.0, 2.0)):
     invs, samples = [], 0
     for off in spreads:
@@ -471,7 +458,7 @@ def _dashboard_inputs(tmp_path):
     return reports, skipped, led
 
 
-def test_html_dashboard_matches_golden(tmp_path):
+def test_html_dashboard_matches_golden(tmp_path, golden):
     reports, skipped, led = _dashboard_inputs(tmp_path)
     regression = detect_regressions(led)
     html = render_html(reports, skipped, ledger=led, regression=regression,
@@ -485,7 +472,7 @@ def test_html_dashboard_matches_golden(tmp_path):
                    "2023-11-14 22:13 UTC"):
         assert needle in html, needle
     assert "http://" not in html and "https://" not in html  # self-contained
-    _assert_matches_golden("dashboard.html", html)
+    golden("dashboard.html", html)
 
 
 def test_render_html_empty_inputs():

@@ -4,15 +4,13 @@ and the report CLI.
 
 Regenerate the golden files after an intentional rendering change with:
 
-    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_report.py -q
+    PYTHONPATH=src python -m pytest tests/test_report.py -q --update-golden
 """
 
 import os
 import pathlib
 import subprocess
 import sys
-
-import pytest
 
 from repro.core import (EvaluationSettings, TrialCache, Tuner, TuningSession,
                         build_reports, ci_mean, extract_incumbent,
@@ -26,7 +24,6 @@ from repro.core.searchspace import grid
 from repro.core.stop_conditions import Direction
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
 
 
 def make_result(score, pruned=False, spreads=(1.0, 2.0)):
@@ -221,19 +218,7 @@ def test_build_reports_structure():
     assert all(abs(g["pct_of_roof"] - 100.0) < 1e-9 for g in triad_rows)
 
 
-def _assert_matches_golden(name, text):
-    golden = GOLDEN_DIR / name
-    if os.environ.get("REGEN_GOLDEN"):
-        golden.parent.mkdir(parents=True, exist_ok=True)
-        golden.write_text(text, encoding="utf-8")
-        pytest.skip(f"regenerated {golden}")
-    assert golden.exists(), \
-        f"missing golden file {golden}; run with REGEN_GOLDEN=1"
-    assert text == golden.read_text(encoding="utf-8"), \
-        f"{name} drifted from golden; REGEN_GOLDEN=1 if intentional"
-
-
-def test_markdown_dashboard_matches_golden():
+def test_markdown_dashboard_matches_golden(golden):
     reports, skipped = build_reports(synthetic_trials())
     md = render_markdown(reports, skipped)
     assert "ASCII" not in md  # sanity: plot is embedded, not described
@@ -243,10 +228,10 @@ def test_markdown_dashboard_matches_golden():
                     "## Fingerprint comparison",
                     "## Skipped fingerprints"):
         assert section in md
-    _assert_matches_golden("roofline_report.md", md)
+    golden("roofline_report.md", md)
 
 
-def test_csv_dashboard_matches_golden():
+def test_csv_dashboard_matches_golden(golden):
     reports, _ = build_reports(synthetic_trials())
     csv = render_csv(reports)
     header, *rows = csv.splitlines()
@@ -255,7 +240,7 @@ def test_csv_dashboard_matches_golden():
     kinds = {r.split(",")[1] for r in rows}
     assert kinds == {"peak_flops", "bandwidth", "curve", "mark", "gap"}
     assert all(len(r.split(",")) == 7 for r in rows)  # no embedded commas
-    _assert_matches_golden("roofline_report.csv", csv)
+    golden("roofline_report.csv", csv)
 
 
 def test_trials_from_result_roundtrip():

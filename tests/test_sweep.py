@@ -1,0 +1,278 @@
+"""Shape-sweep campaigns and the dispatch-time config oracle — shape
+keys, joint shape×config encoding, prior-warmed sweep strategy, campaign
+cache/ledger attribution, cold-start fallback, and the acceptance
+criterion: on a 3×3 synthetic-DGEMM grid with one held-out shape, the
+oracle's predicted config lands within 2% of that shape's exhaustive
+optimum while the campaign spends ≤ 25% of the exhaustive trial count."""
+
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from benchmarks.common import (gemm_shape_space, sweep_config_space,
+                               synthetic_gemm_family)
+from repro.core import Direction, EvaluationSettings, TrialCache, grid
+from repro.history.ledger import iter_runs
+from repro.surrogate import SpaceEncoder
+from repro.sweep import (ConfigOracle, SweepCampaign, SweepStrategy,
+                         parse_shape_key, shape_benchmark_name, shape_key,
+                         split_benchmark_name)
+
+SETTINGS = EvaluationSettings(max_invocations=2, max_iterations=3,
+                              max_time_s=5.0, use_inner_prune=True,
+                              direction=Direction.MAXIMIZE)
+
+
+def true_score(shape, cfg):
+    """The synthetic family's deterministic objective, evaluated directly."""
+    return synthetic_gemm_family(shape)(cfg)()()
+
+
+def exhaustive_optimum(shape, space):
+    best_cfg, best = None, -np.inf
+    for cfg in space.ordered("exhaustive"):
+        s = true_score(shape, cfg)
+        if s > best:
+            best_cfg, best = cfg, s
+    return best_cfg, best
+
+
+# ---------------------------------------------------------------- shape keys
+
+def test_shape_key_is_canonical_and_roundtrips():
+    shape = {"n": 1024, "m": 512}
+    key = shape_key(shape)
+    assert key == "m=512,n=1024"              # sorted, insertion-order-proof
+    assert parse_shape_key(key) == {"m": 512, "n": 1024}
+    assert shape_key(parse_shape_key(key)) == key
+
+
+def test_shape_key_parses_value_types():
+    assert parse_shape_key("a=1,b=1.5,c=fp16") == {"a": 1, "b": 1.5,
+                                                   "c": "fp16"}
+
+
+def test_shape_key_rejects_reserved_characters():
+    for bad in ({}, {"m=1": 2}, {"m": "a,b"}, {"m": "x@y"}):
+        with pytest.raises(ValueError):
+            shape_key(bad)
+
+
+def test_benchmark_name_split_roundtrips():
+    name = shape_benchmark_name("dgemm", {"m": 256, "n": 512})
+    assert name == "dgemm@m=256,n=512"
+    assert split_benchmark_name(name) == ("dgemm", {"m": 256, "n": 512})
+    assert split_benchmark_name("plain") == ("plain", None)
+    with pytest.raises(ValueError):
+        shape_benchmark_name("a@b", {"m": 1})
+
+
+# ------------------------------------------------------------ shape encoding
+
+def test_encoder_shape_features_interpolate_on_log_scale():
+    space = grid(bm=(16, 32))
+    shapes = grid(m=(256, 512, 1024))
+    enc = SpaceEncoder(space, shape_space=shapes)
+    assert enc.dim == enc.config_dim + 1
+    lo = enc.shape_features({"m": 256})
+    mid = enc.shape_features({"m": 512})
+    hi = enc.shape_features({"m": 1024})
+    assert lo[0] == 0.0 and hi[0] == 1.0
+    assert mid[0] == pytest.approx(0.5)       # geometric midpoint, log scale
+    # unseen shapes interpolate; out-of-range shapes clamp
+    assert 0.5 < enc.shape_features({"m": 768})[0] < 1.0
+    assert enc.shape_features({"m": 4096})[0] == 1.0
+    assert enc.shape_features({"m": 16})[0] == 0.0
+
+
+def test_encoder_joint_encoding_requires_and_embeds_shape():
+    space = grid(bm=(16, 32))
+    enc = SpaceEncoder(space, shape_space=grid(m=(256, 1024)))
+    with pytest.raises(TypeError):
+        enc.encode({"bm": 16})
+    x = enc.encode({"bm": 32}, shape={"m": 1024})
+    assert x.shape == (enc.dim,)
+    assert x[-1] == 1.0
+    assert enc.decode(x)["bm"] == 32          # decode ignores shape block
+
+
+def test_encoder_categorical_shape_param_is_one_hot():
+    enc = SpaceEncoder(grid(bm=(16, 32)),
+                       shape_space=grid(dtype=("fp16", "fp32")))
+    f16 = enc.shape_features({"dtype": "fp16"})
+    f32 = enc.shape_features({"dtype": "fp32"})
+    assert sorted(f16) == [0.0, 1.0] and sorted(f32) == [0.0, 1.0]
+    assert not np.allclose(f16, f32)
+
+
+# ------------------------------------------------------------- SweepStrategy
+
+def test_sweep_strategy_requires_complete_shape():
+    with pytest.raises(KeyError):
+        SweepStrategy({"m": 256}, grid(m=(256, 512), n=(256, 512)))
+
+
+def test_sweep_strategy_priors_shrink_n_init():
+    space = sweep_config_space()
+    shapes = gemm_shape_space(quick=True)
+    cold = SweepStrategy({"m": 256, "n": 256}, shapes, seed=0)
+    cold.reset(space, SETTINGS)
+    priors = [({"m": 512, "n": 512}, cfg, true_score({"m": 512, "n": 512},
+                                                     cfg))
+              for cfg in space.ordered("exhaustive")]
+    warm = SweepStrategy({"m": 256, "n": 256}, shapes, priors=priors, seed=0)
+    warm.reset(space, SETTINGS)
+    assert warm._n_priors == len(priors)
+    assert len(warm._init_queue) < len(cold._init_queue)
+
+
+def test_sweep_strategy_skips_foreign_prior_configs():
+    space = sweep_config_space()
+    shapes = gemm_shape_space(quick=True)
+    priors = [({"m": 512, "n": 512}, {"bm": 16, "bn": 16}, 99.0),
+              ({"m": 512, "n": 512}, {"weird": True}, 1.0)]
+    strat = SweepStrategy({"m": 256, "n": 256}, shapes, priors=priors)
+    strat.reset(space, SETTINGS)
+    assert strat._n_priors == 1
+
+
+# ----------------------------------------------------- campaign + attribution
+
+def test_campaign_stamps_cache_and_ledger(tmp_path):
+    shapes = grid(m=(256, 1024))
+    campaign = SweepCampaign(sweep_config_space(), shapes,
+                             synthetic_gemm_family, SETTINGS, name="camp",
+                             cache_dir=tmp_path, budget_per_shape=5, seed=3)
+    result = campaign.run(timestamp=1.0)
+    assert len(result.outcomes) == 2
+    assert result.outcome_for({"m": 1024}) is not None
+    assert result.outcome_for({"m": 4096}) is None
+
+    cache = TrialCache(tmp_path / "camp.jsonl")
+    benches = cache.benchmarks(prefix="camp@")
+    assert benches == ["camp@m=1024", "camp@m=256"]
+    for t in cache.trials():
+        assert t.strategy == "sweep"
+
+    records = list(iter_runs(tmp_path / "history.jsonl"))
+    assert {r.benchmark for r in records} == {"camp@m=256", "camp@m=1024"}
+    assert all(r.strategy == "sweep" for r in records)
+    assert all(r.campaign == "camp" for r in records)
+
+
+def test_campaign_resume_serves_from_cache(tmp_path):
+    shapes = grid(m=(256, 1024))
+    campaign = SweepCampaign(sweep_config_space(), shapes,
+                             synthetic_gemm_family, SETTINGS, name="camp",
+                             cache_dir=tmp_path, budget_per_shape=5, seed=3)
+    first = campaign.run(timestamp=1.0)
+    n = len(TrialCache(campaign.cache_path))
+    second = campaign.run(timestamp=2.0)
+    assert len(TrialCache(campaign.cache_path)) == n   # nothing re-measured
+    for o in second.outcomes:
+        assert o.result.n_cached == len(o.result.trials)
+    assert {shape_key(o.shape) for o in first.outcomes} \
+        == {shape_key(o.shape) for o in second.outcomes}
+
+
+def test_campaign_priors_exclude_own_shape(tmp_path):
+    shapes = grid(m=(256, 1024))
+    campaign = SweepCampaign(sweep_config_space(), shapes,
+                             synthetic_gemm_family, SETTINGS, name="camp",
+                             cache_dir=tmp_path, budget_per_shape=4, seed=1)
+    campaign.run(timestamp=1.0)
+    pri = campaign.priors(exclude={"m": 256})
+    assert pri, "sibling trials should produce priors"
+    assert all(shape_key(s) != "m=256" for s, _, _ in pri)
+    assert len(campaign.priors()) > len(pri)
+
+
+# ------------------------------------------------------------------- oracle
+
+def test_oracle_cold_falls_back_to_nearest_incumbent(tmp_path):
+    shapes = grid(m=(256, 512, 1024))
+    campaign = SweepCampaign(sweep_config_space(), shapes,
+                             synthetic_gemm_family, SETTINGS, name="cold",
+                             cache_dir=tmp_path, budget_per_shape=6, seed=0)
+    campaign.run(shapes=[{"m": 256}], timestamp=1.0)
+    oracle = campaign.oracle()
+    assert not oracle.is_warm()               # one tuned shape < min_shapes
+    ans = oracle.best_for({"m": 300})
+    assert ans.cold
+    assert ans.source == "nearest:m=256"
+    assert ans.donor == {"m": 256}
+    # a directly-tuned query answers with its own incumbent
+    own = oracle.best_for({"m": 256})
+    assert own.source == "nearest:m=256"
+
+
+def test_oracle_empty_cache_raises(tmp_path):
+    oracle = ConfigOracle(sweep_config_space(), grid(m=(256, 1024)),
+                          [], base="none")
+    with pytest.raises(LookupError):
+        oracle.best_for({"m": 512})
+
+
+def test_oracle_validates_query_shape(tmp_path):
+    oracle = ConfigOracle(sweep_config_space(),
+                          grid(m=(256, 1024), n=(256, 1024)), [],
+                          base="none")
+    with pytest.raises(KeyError):
+        oracle.best_for({"m": 512})
+
+
+# ------------------------------------------------------- acceptance criterion
+
+def test_oracle_recovers_heldout_shape_optimum(tmp_path):
+    """ISSUE acceptance: 3×3 synthetic grid, shape (512, 512) held out.
+    The oracle's prediction for the unseen shape must score within 2% of
+    its exhaustive optimum, at ≤ 25% of the exhaustive trial count —
+    end-to-end through the shared cache and ledger."""
+    config_space = sweep_config_space()
+    shape_space = gemm_shape_space(quick=True)
+    holdout = {"m": 512, "n": 512}
+    campaign = SweepCampaign(config_space, shape_space,
+                             synthetic_gemm_family, SETTINGS,
+                             name="accept", cache_dir=tmp_path,
+                             budget_per_shape=9, seed=0)
+    result = campaign.run(holdout=[holdout], timestamp=1.0)
+
+    assert len(result.outcomes) == 8          # 9 grid shapes minus holdout
+    assert result.outcome_for(holdout) is None
+    exhaustive = shape_space.cardinality * config_space.cardinality
+    assert result.total_trials <= 0.25 * exhaustive
+
+    oracle = campaign.oracle()
+    assert oracle.is_warm()
+    answer = oracle.best_for(holdout)
+    assert answer.source == "model"
+
+    best_cfg, best = exhaustive_optimum(holdout, config_space)
+    achieved = true_score(holdout, answer.config)
+    assert achieved >= best * 0.98, (answer.config, best_cfg)
+
+    # attribution survived the full pipeline
+    cache = TrialCache(campaign.cache_path)
+    assert "accept@m=512,n=512" not in cache.benchmarks()
+    assert all(t.strategy == "sweep" for t in cache.trials())
+    records = [r for r in iter_runs(tmp_path / "history.jsonl")
+               if r.campaign == "accept"]
+    assert len(records) == 8
+
+
+# ----------------------------------------------------------------------- CLI
+
+def test_sweep_cli_holdout_eval(tmp_path):
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "sweep.py"),
+         "--session", "cli", "--benchmark", "synthetic",
+         "--budget-per-shape", "9", "--oracle-eval", "m=512,n=512",
+         "--cache-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "oracle     : warm" in out.stdout
+    assert "gap 0.00%" in out.stdout
