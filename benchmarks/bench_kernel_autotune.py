@@ -13,7 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import Direction, EvaluationSettings, SearchSpace, Tuner, grid
+from repro.core import (Direction, EvaluationSettings, SearchSpace, Tuner,
+                        default_cache, grid)
 from repro.kernels.matmul import matmul, matmul_ref, vmem_bytes
 
 from .common import emit, print_table
@@ -63,11 +64,16 @@ def run(quick: bool = True) -> dict:
     result = Tuner(space, settings).tune(benchmark)
     best = result.best_config
 
-    # functional verification of the winning tile in interpret mode
+    # functional verification of the winning tile in interpret mode;
+    # the Pallas wrapper is jit-decorated, so the AOT cache lowers it
+    # directly with its declared static_argnames — re-running the bench
+    # in-process reuses the compiled executable
     a = jax.random.normal(jax.random.key(0), (256, 256), jnp.float32)
     b = jax.random.normal(jax.random.key(1), (256, 256), jnp.float32)
-    out = matmul(a, b, bm=min(best["bm"], 256), bn=min(best["bn"], 256),
-                 bk=min(best["bk"], 256), interpret=True)
+    tile = {"bm": min(best["bm"], 256), "bn": min(best["bn"], 256),
+            "bk": min(best["bk"], 256), "interpret": True}
+    exe = default_cache().compile(matmul, (a, b), static=tile)
+    out = exe(a, b)
     err = float(jnp.max(jnp.abs(out - matmul_ref(a, b))))
 
     rows = [{"quantity": "search space", "value": space.cardinality},

@@ -49,6 +49,12 @@ fi
 echo "== doc snippets =="
 python scripts/check_docs.py
 
+echo "== harness self-benchmark baseline =="
+# blocking but deterministic: validates the committed BENCH_harness.json
+# (schema + recorded speedup/agreement thresholds) without measuring.
+# The GitHub `bench-harness` job re-measures fresh, non-blocking.
+python scripts/bench_harness.py --check
+
 echo "== perf gate (dry-run, non-blocking) =="
 # reports ledger drift without failing the build; flip off --dry-run in a
 # deployment with a persistent .tuning_sessions/history.jsonl to enforce.

@@ -60,7 +60,19 @@ def main() -> int:
     ap.add_argument("--dry-run", action="store_true",
                     help="report verdicts but always exit 0 (non-blocking "
                          "CI step; also tolerates a missing ledger)")
+    ap.add_argument("--harness", metavar="PATH", default=None,
+                    help="also validate the harness self-benchmark "
+                         "baseline at PATH (scripts/bench_harness.py "
+                         "--check semantics; blocking even with "
+                         "--dry-run, because the check is deterministic)")
     args = ap.parse_args()
+
+    if args.harness is not None:
+        sys.path.insert(0, str(_REPO / "scripts"))
+        from bench_harness import check as harness_check
+        rc = harness_check(pathlib.Path(args.harness))
+        if rc:
+            return rc
 
     path = pathlib.Path(args.ledger)
     if not path.exists():

@@ -10,12 +10,17 @@ from .cache import (AUTO_LEDGER, CACHE_VERSION, BoundCache, CachedTrial,
 from .confidence import (Interval, ReservoirBootstrap, ci_mean,
                          median_of_means, normal_quantile,
                          sign_test_median_ci, spearman, t_quantile)
-from .evaluator import (EvalResult, EvaluationSettings, Evaluator,
-                        InvocationResult, timed_sampler)
+from .evaluator import (BatchCalibration, ClockCalibration, EvalResult,
+                        EvaluationSettings, Evaluator, InvocationResult,
+                        TimingResolutionWarning, calibrate_batch,
+                        calibrate_clock, steady_sampler, timed_sampler)
+from .exec_cache import (CompilePipeline, ExecCacheStats, ExecutableCache,
+                         default_cache)
 from .executor import (Batch, BatchStats, ExecutionBackend, ExecutionStats,
                        IncumbentCell, ProcessPoolBackend, SerialBackend,
                        SimulatedShardedBackend, ThreadPoolBackend,
                        TrialOutcome)
+from .profiling import PhaseProfiler, PhaseStats, phase, profiler
 from .report import (FingerprintReport, IncumbentTrial, build_reports,
                      dgemm_config_intensity, extract_incumbent,
                      group_by_fingerprint, pooled_state, render_csv,
@@ -46,8 +51,12 @@ __all__ = [
     "dgemm_config_intensity", "extract_incumbent", "group_by_fingerprint",
     "pooled_state", "render_csv", "render_markdown", "trials_from_result",
     "triad_subsystems",
-    "EvalResult", "EvaluationSettings", "Evaluator", "InvocationResult",
-    "timed_sampler",
+    "BatchCalibration", "ClockCalibration", "EvalResult",
+    "EvaluationSettings", "Evaluator", "InvocationResult",
+    "TimingResolutionWarning", "calibrate_batch", "calibrate_clock",
+    "steady_sampler", "timed_sampler",
+    "CompilePipeline", "ExecCacheStats", "ExecutableCache", "default_cache",
+    "PhaseProfiler", "PhaseStats", "phase", "profiler",
     "Batch", "BatchStats", "ExecutionBackend", "ExecutionStats",
     "IncumbentCell", "ProcessPoolBackend", "SerialBackend",
     "SimulatedShardedBackend", "ThreadPoolBackend", "TrialOutcome",

@@ -19,9 +19,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence, Union
+import warnings
+from typing import Any, Callable, Optional, Sequence, Union
 
 from . import welford
+from .profiling import phase, profiler
 from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
                               MaxTime, StopCondition, StopDecision,
                               UpperBoundPrune, first_decision)
@@ -172,22 +174,23 @@ class Evaluator:
         while True:
             x = float(sample_fn())
             count += 1
-            state = welford.update(state, x)
-            ci_fn = None
-            if boot is not None:
-                boot.update(x)
-                ci_fn = lambda conf, _t: boot.ci_mean(conf)  # noqa: E731
-            elif samples is not None:
-                samples.append(x)
-                ci_fn = lambda conf, _t: sign_test_median_ci(  # noqa: E731
-                    samples, conf)
-            ctx = EvalContext(welford=state,
-                              elapsed_s=self.clock() - t0,
-                              count=count,
-                              incumbent=_resolve_incumbent(incumbent),
-                              direction=self.settings.direction,
-                              ci_fn=ci_fn)
-            decision = first_decision(conditions, ctx)
+            with phase("stats"):
+                state = welford.update(state, x)
+                ci_fn = None
+                if boot is not None:
+                    boot.update(x)
+                    ci_fn = lambda conf, _t: boot.ci_mean(conf)  # noqa: E731
+                elif samples is not None:
+                    samples.append(x)
+                    ci_fn = lambda conf, _t: sign_test_median_ci(  # noqa: E731
+                        samples, conf)
+                ctx = EvalContext(welford=state,
+                                  elapsed_s=self.clock() - t0,
+                                  count=count,
+                                  incumbent=_resolve_incumbent(incumbent),
+                                  direction=self.settings.direction,
+                                  ci_fn=ci_fn)
+                decision = first_decision(conditions, ctx)
             if decision is not None:
                 break
         return InvocationResult(mean=float(state.mean), count=count,
@@ -211,7 +214,8 @@ class Evaluator:
         direction = s.direction
         best_inv: Optional[float] = None
         while True:
-            sample_fn = make_invocation()
+            with phase("setup"):
+                sample_fn = make_invocation()
             inv = self._run_invocation(sample_fn, incumbent, inner_conds)
             invocations.append(inv)
             measured += inv.elapsed_s
@@ -243,21 +247,220 @@ class Evaluator:
                           stop_reason=decision.reason)
 
 
+class TimingResolutionWarning(UserWarning):
+    """A timed sample landed under 10x the clock's resolution.
+
+    At that scale quantization error alone is >10% of the reading — the
+    observation is noise, not measurement. Switch to ``steady_sampler``
+    (batch B calls per observation) or grow the per-call workload.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockCalibration:
+    """Measured properties of a clock callable.
+
+    ``resolution_s`` — smallest positive delta two consecutive readings
+    can differ by (timer quantum). ``overhead_s`` — mean cost of one
+    ``clock()`` call, which a t0/t1 bracket adds to every sample.
+    """
+
+    resolution_s: float
+    overhead_s: float
+
+
+_CLOCK_CALIBRATION: Optional[ClockCalibration] = None
+
+
+def calibrate_clock(clock: Callable[[], float] = time.perf_counter,
+                    samples: int = 4096) -> ClockCalibration:
+    """Measure a clock's resolution and per-call overhead.
+
+    The default ``time.perf_counter`` is calibrated once per process and
+    cached; custom clocks are measured fresh on every call (tests pass
+    deterministic fake clocks that must not be consumed by calibration
+    — samplers only auto-calibrate the default clock).
+    """
+    global _CLOCK_CALIBRATION
+    is_default = clock is time.perf_counter
+    if is_default and _CLOCK_CALIBRATION is not None:
+        return _CLOCK_CALIBRATION
+    # Overhead: time a tight loop of clock() calls.
+    t0 = clock()
+    for _ in range(samples):
+        clock()
+    overhead = (clock() - t0) / (samples + 1)
+    # Resolution: smallest positive delta seen across consecutive reads.
+    resolution = float("inf")
+    prev = clock()
+    for _ in range(samples):
+        cur = clock()
+        d = cur - prev
+        if 0.0 < d < resolution:
+            resolution = d
+        prev = cur
+    if resolution == float("inf"):    # clock never advanced
+        resolution = 0.0
+    cal = ClockCalibration(resolution_s=resolution, overhead_s=overhead)
+    if is_default:
+        _CLOCK_CALIBRATION = cal
+    return cal
+
+
 def timed_sampler(fn: Callable[[], None], work: float,
                   clock: Callable[[], float] = time.perf_counter,
+                  calibration: Optional[ClockCalibration] = None,
                   ) -> Callable[[], float]:
     """Wrap a side-effecting callable into a metric sampler.
 
     Returns a sampler yielding ``work / elapsed`` per call — e.g. FLOPs/s when
     ``work`` is the FLOP count of one call, or bytes/s for bandwidth
     benchmarks. This is the paper's gettimeofday-around-the-BLAS-call pattern.
+
+    The default clock is calibrated once per process: its per-call
+    overhead is subtracted from every reading, and a sample landing
+    under 10x the clock's resolution raises a one-shot
+    :class:`TimingResolutionWarning` instead of silently reporting a
+    quantization-noise throughput. Custom clocks are taken at face value
+    unless an explicit ``calibration`` is passed.
     """
+    if calibration is None and clock is time.perf_counter:
+        calibration = calibrate_clock(clock)
+    overhead = calibration.overhead_s if calibration else 0.0
+    resolution = calibration.resolution_s if calibration else 0.0
+    floor = resolution if resolution > 0.0 else 1e-12
+    warned = [False]
 
     def sample() -> float:
         t0 = clock()
         fn()
         t1 = clock()
-        dt = max(t1 - t0, 1e-12)
+        dt = t1 - t0 - overhead
+        if dt < 10.0 * resolution and not warned[0]:
+            warned[0] = True
+            warnings.warn(
+                f"timed sample ({dt:.3g}s) is under 10x the clock "
+                f"resolution ({resolution:.3g}s); use steady_sampler or a "
+                f"larger per-call workload", TimingResolutionWarning,
+                stacklevel=2)
+        dt = max(dt, floor)
+        prof = profiler()
+        if prof is not None:
+            prof.add("dispatch", t1 - t0)
         return work / dt
 
+    return sample
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchCalibration:
+    """Fitted dispatch-batch timing model ``t(B) = overhead + B * t_exec``.
+
+    ``batch`` is the smallest B keeping the fixed per-observation
+    overhead (clock bracket + final sync + queue ramp) under the
+    requested fraction of useful kernel time.
+    """
+
+    batch: int
+    t_exec_s: float
+    overhead_s: float
+
+
+def calibrate_batch(dispatch: Callable[[], Any],
+                    sync: Callable[[Any], None], *,
+                    clock: Callable[[], float] = time.perf_counter,
+                    overhead_frac: float = 0.02,
+                    max_batch: int = 1024,
+                    probe: int = 8) -> BatchCalibration:
+    """Choose the dispatch batch size B for :func:`steady_sampler`.
+
+    Times one synced call and one ``probe``-deep batch, fits
+    ``t(B) = overhead + B * t_exec``, and returns the smallest B with
+    ``overhead / (B * t_exec) <= overhead_frac``. Costs ``2 + probe + 3``
+    kernel executions — calibrate once per workload and share the result
+    across invocations (``steady_sampler(..., batch=cal.batch)``).
+    """
+    if probe < 2:
+        raise ValueError(f"probe must be >= 2, got {probe}")
+    sync(dispatch())               # warm: compile + allocator + queue
+    sync(dispatch())
+    singles = []
+    for _ in range(3):
+        t0 = clock()
+        sync(dispatch())
+        singles.append(clock() - t0)
+    t1 = sorted(singles)[1]        # median of 3
+    t0 = clock()
+    h = None
+    for _ in range(probe):
+        h = dispatch()
+    sync(h)
+    tb = clock() - t0
+    t_exec = max((tb - t1) / (probe - 1), 1e-12)
+    overhead = max(t1 - t_exec, 0.0)
+    batch = max(1, min(max_batch,
+                       -(-overhead // (overhead_frac * t_exec))))
+    return BatchCalibration(batch=int(batch), t_exec_s=t_exec,
+                            overhead_s=overhead)
+
+
+def steady_sampler(dispatch: Callable[[], Any], work: float, *,
+                   sync: Callable[[Any], None],
+                   batch: Optional[int] = None,
+                   clock: Callable[[], float] = time.perf_counter,
+                   overhead_frac: float = 0.02,
+                   max_batch: int = 1024,
+                   calibration: Optional[ClockCalibration] = None,
+                   ) -> Callable[[], float]:
+    """Batched low-overhead sampler: B async dispatches, one sync.
+
+    ``dispatch`` enqueues one kernel execution without blocking and
+    returns a handle (a jax async array); ``sync`` blocks on a handle
+    (``jax.block_until_ready``). Each observation enqueues B dispatches
+    back-to-back, syncs once, and reports ``work * B / elapsed`` — the
+    per-sample clock + sync overhead is amortized over B and the device
+    queue stays full between calls ("steady state" dispatch).
+
+    ``batch=None`` auto-calibrates B via :func:`calibrate_batch` so the
+    fixed overhead stays under ``overhead_frac`` of kernel time; the
+    chosen B is exposed as ``sample.batch``. Calibration costs ~13
+    kernel executions, so share an explicit ``batch`` across invocations
+    of the same workload.
+
+    Welford/CI semantics with B > 1: each observation is the *mean
+    throughput of a B-call batch*, so downstream confidence intervals
+    quantify run-to-run variation of batch means — per-call variance is
+    averaged down by ~B inside each observation and CIConverged
+    typically triggers sooner. Scores remain estimates of the same mean
+    rate; see docs/harness-perf.md.
+    """
+    if batch is None:
+        bcal = calibrate_batch(dispatch, sync, clock=clock,
+                               overhead_frac=overhead_frac,
+                               max_batch=max_batch)
+        batch = bcal.batch
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if calibration is None and clock is time.perf_counter:
+        calibration = calibrate_clock(clock)
+    clock_overhead = 2.0 * calibration.overhead_s if calibration else 0.0
+    total_work = work * batch
+    b = batch
+
+    def sample() -> float:
+        t0 = clock()
+        h = None
+        for _ in range(b):
+            h = dispatch()
+        tm = clock()
+        sync(h)
+        t1 = clock()
+        dt = max(t1 - t0 - clock_overhead, 1e-12)
+        prof = profiler()
+        if prof is not None:
+            prof.add("dispatch", tm - t0)
+            prof.add("sync", t1 - tm)
+        return total_work / dt
+
+    sample.batch = batch
     return sample

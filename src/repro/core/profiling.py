@@ -1,0 +1,156 @@
+"""Phase-bucket profiling of the tuning harness itself.
+
+The paper's 116x search-time win came from cutting *sample counts*; the
+next order of magnitude is per-trial overhead, and you cannot cut what
+you cannot see. This module is the minimal instrumentation layer the
+harness self-benchmark (``scripts/bench_harness.py``) activates to
+attribute a tuning session's wall clock to phase buckets:
+
+  ``setup``     invocation-factory work (data generation, pre-heat)
+  ``compile``   kernel lowering + compilation (ExecutableCache misses)
+  ``dispatch``  timed kernel work as seen by the samplers
+  ``sync``      device synchronization at the end of a batched sample
+  ``stats``     Welford updates + stop-condition evaluation
+  ``cache_io``  trial-cache JSONL appends
+
+Buckets may nest (a cache-served ``compile`` happens inside ``setup``);
+each records its own wall time independently, so buckets are a
+*profile*, not a partition — ``bench_harness`` derives its headline
+non-measured metric from session wall clock and kernel-time references,
+and uses these buckets to explain where the overhead went.
+
+Instrumentation sites call :func:`phase`, which is a no-op (one global
+read, no allocation) unless a :class:`PhaseProfiler` is installed — the
+hot per-sample paths stay hardware-fast when nobody is profiling.
+Thread-safe: concurrent trials on the thread backend fold into the same
+buckets under a lock.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+__all__ = ["PhaseProfiler", "PhaseStats", "phase", "profiler"]
+
+
+class PhaseStats:
+    """Accumulated (wall seconds, enter count) of one bucket."""
+
+    __slots__ = ("seconds", "count")
+
+    def __init__(self):
+        self.seconds = 0.0
+        self.count = 0
+
+    def to_json(self) -> dict:
+        return {"seconds": self.seconds, "count": self.count}
+
+
+class _NullPhase:
+    """Shared no-op context manager returned when no profiler is active."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullPhase()
+
+
+class _Span:
+    __slots__ = ("profiler", "name", "t0")
+
+    def __init__(self, profiler: "PhaseProfiler", name: str):
+        self.profiler = profiler
+        self.name = name
+
+    def __enter__(self):
+        self.t0 = self.profiler.clock()
+        return self
+
+    def __exit__(self, *exc):
+        self.profiler.add(self.name, self.profiler.clock() - self.t0)
+        return False
+
+
+class PhaseProfiler:
+    """Collects phase buckets while installed as the active profiler.
+
+    Use as a context manager (installation is process-global — one
+    profiler at a time; nested installs raise)::
+
+        prof = PhaseProfiler()
+        with prof:
+            tuner.tune(benchmark)
+        print(prof.report())
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._buckets: dict[str, PhaseStats] = {}
+
+    # -- collection -----------------------------------------------------------
+    def add(self, name: str, seconds: float) -> None:
+        with self._lock:
+            st = self._buckets.get(name)
+            if st is None:
+                st = self._buckets[name] = PhaseStats()
+            st.seconds += seconds
+            st.count += 1
+
+    def phase(self, name: str) -> _Span:
+        return _Span(self, name)
+
+    # -- reading --------------------------------------------------------------
+    def buckets(self) -> dict[str, PhaseStats]:
+        with self._lock:
+            return dict(self._buckets)
+
+    def to_json(self) -> dict:
+        return {name: st.to_json()
+                for name, st in sorted(self.buckets().items())}
+
+    def report(self) -> str:
+        rows = [f"  {name:<10s} {st.seconds * 1e3:9.3f} ms x{st.count}"
+                for name, st in sorted(self.buckets().items())]
+        return "harness phases:\n" + "\n".join(rows) if rows \
+            else "harness phases: (empty)"
+
+    # -- installation ---------------------------------------------------------
+    def __enter__(self) -> "PhaseProfiler":
+        global _ACTIVE
+        with _INSTALL_LOCK:
+            if _ACTIVE is not None:
+                raise RuntimeError("a PhaseProfiler is already active")
+            _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        global _ACTIVE
+        with _INSTALL_LOCK:
+            _ACTIVE = None
+        return False
+
+
+_INSTALL_LOCK = threading.Lock()
+_ACTIVE: Optional[PhaseProfiler] = None
+
+
+def profiler() -> Optional[PhaseProfiler]:
+    """The currently installed profiler, or ``None``."""
+    return _ACTIVE
+
+
+def phase(name: str):
+    """Context manager timing one phase span; free when not profiling."""
+    active = _ACTIVE
+    if active is None:
+        return _NULL
+    return active.phase(name)

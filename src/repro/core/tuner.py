@@ -21,8 +21,10 @@ from typing import Callable, Optional, Sequence
 
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator, Incumbent,
                         InvocationFactory)
+from .exec_cache import CompilePipeline
 from .executor import (Batch, BatchStats, ExecutionBackend, IncumbentCell,
                        SerialBackend, TrialOutcome)
+from .profiling import phase
 from .searchspace import Config, SearchSpace
 from .strategy import ExhaustiveStrategy, SearchStrategy, SuccessiveHalvingStrategy
 
@@ -85,6 +87,7 @@ class TuningResult:
     strategy: str = "exhaustive"   # SearchStrategy.name that drove the run
     batches: tuple[BatchStats, ...] = ()   # one entry per strategy round
     n_seeded: int = 0              # transfer seeds injected into the search
+    n_precompiled: int = 0         # executables compiled by the pipeline
 
     def summary_row(self) -> dict:
         return {
@@ -131,7 +134,9 @@ class Tuner:
              cache=None, warm_start: bool = False,
              seeds: Sequence[Config] = (),
              ledger=None, timestamp: Optional[float] = None,
-             validate: str = "warn") -> TuningResult:
+             validate: str = "warn",
+             pipeline: "str | CompilePipeline | None" = "auto",
+             ) -> TuningResult:
         """Search the space for the best configuration.
 
         ``backend`` schedules the evaluations (default
@@ -159,6 +164,19 @@ class Tuner:
         ``"strict"`` raises :class:`~repro.lint.WorkloadAuditError`
         instead, so a mis-declared workload never burns measurement
         time; ``"off"`` skips the audit.
+
+        ``pipeline`` controls **pipelined compilation**: when the
+        benchmark exposes a ``precompile(config)`` hook (the standard
+        factories warm the :class:`~repro.core.exec_cache.ExecutableCache`
+        from ``ShapeDtypeStruct``s), every fresh config in a proposed
+        batch is submitted to a background
+        :class:`~repro.core.exec_cache.CompilePipeline` before the batch
+        executes — trial k+1's executable compiles while trial k runs.
+        ``"auto"`` (default) enables this on the serial and thread
+        backends; ``None``/``"off"`` disables it; an explicit
+        :class:`CompilePipeline` is used as-is (and left open for the
+        caller to close). The cache's in-flight deduplication guarantees
+        a trial never compiles what the pipeline already started.
         """
         from .cache import settings_key
 
@@ -183,6 +201,22 @@ class Tuner:
         strategy.reset(self.space, self.settings, seeds=projected)
         evaluate = EvaluateTask(self.settings, benchmark, clock=self.clock)
         hint = getattr(backend, "batch_hint", None)
+        precompile = getattr(benchmark, "precompile", None)
+        own_pipeline = False
+        if pipeline == "auto":
+            # process workers cannot share this process's executable
+            # cache, and the simulated backend runs nothing — pipelining
+            # pays off only where compiles land in our process
+            if precompile is not None and \
+                    getattr(backend, "name", "") in ("serial", "thread"):
+                pipeline = CompilePipeline()
+                own_pipeline = True
+            else:
+                pipeline = None
+        elif pipeline == "off":
+            pipeline = None
+        if pipeline is not None and precompile is None:
+            pipeline = None
         records: list[TrialRecord] = []
         # effective settings key of the batch currently executing; observe
         # runs between generator resumes, so this is stable per batch
@@ -213,6 +247,14 @@ class Tuner:
                     else:
                         fresh.append(cfg)
                 if fresh:
+                    if pipeline is not None:
+                        # submitted before the batch executes: the worker
+                        # compiles ahead while the backend measures, and
+                        # a trial that overtakes it just waits on the
+                        # cache's in-flight entry instead of recompiling
+                        for cfg in fresh:
+                            pipeline.submit(
+                                lambda c=cfg: precompile(c))
                     current_key["value"] = session_key \
                         if asked.settings is None \
                         else settings_key(asked.settings)
@@ -223,9 +265,10 @@ class Tuner:
             # the worker thread on concurrent backends (TrialCache.put is
             # thread-safe) — so a killed run keeps every completed trial
             if cache is not None:
-                cache.put(outcome.config, outcome.result,
-                          strategy=strategy.name,
-                          settings_key=current_key["value"])
+                with phase("cache_io"):
+                    cache.put(outcome.config, outcome.result,
+                              strategy=strategy.name,
+                              settings_key=current_key["value"])
 
         def observe(outcome: TrialOutcome) -> None:
             strategy.tell(outcome.config, outcome.result)
@@ -234,9 +277,18 @@ class Tuner:
                                        worker=outcome.worker))
 
         t0 = self.clock()
-        _, stats = backend.run(batches(), evaluate, cell,
-                               progress=progress, observe=observe,
-                               persist=persist)
+        try:
+            _, stats = backend.run(batches(), evaluate, cell,
+                                   progress=progress, observe=observe,
+                                   persist=persist)
+        finally:
+            n_precompiled = 0
+            if pipeline is not None:
+                if own_pipeline:
+                    # discard queued leftovers; the in-flight task (if
+                    # any) finishes — never kill a compile mid-way
+                    pipeline.close(wait=False)
+                n_precompiled = pipeline.counts[1]
         best_cfg, best_score = cell.snapshot()
         trials = tuple(records)
         result = TuningResult(
@@ -257,6 +309,7 @@ class Tuner:
             strategy=strategy.name,
             batches=stats.batches,
             n_seeded=len(projected),
+            n_precompiled=n_precompiled,
         )
         if ledger is not None:
             # duck-typed BoundLedger so core never imports repro.history

@@ -55,6 +55,9 @@ CODES: dict[str, tuple[str, str, str]] = {
               "unseeded RNG in benchmark data generation"),
     "MS206": ("harness", "warning",
               "sync covers only part of the timed computation's outputs"),
+    "MS207": ("harness", "warning",
+              "jax.jit inside an invocation factory bypasses the "
+              "executable cache"),
     "MS301": ("locks", "error",
               "shared JSONL write outside an exclusive flock"),
     "MS302": ("locks", "error",

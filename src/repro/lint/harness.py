@@ -19,6 +19,12 @@ gettimeofday-around-the-kernel pattern the paper (and
   MS206  ``block_until_ready`` on one name of a multi-output unpacking
          whose sibling outputs are used later — the clock stops while
          the unsynced outputs may still be computing
+  MS207  ``jax.jit`` invoked directly inside an *invocation factory*
+         (a scope named ``factory``/``make_invocation``, or one
+         returning a ``timed_sampler``/``steady_sampler``) — the
+         factory runs once per outer-loop invocation, so every
+         invocation re-traces the same kernel; route compilation
+         through ``repro.core.ExecutableCache`` instead
 
 Heuristics are deliberately scoped to this repo's idioms: opaque calls
 (``fn()``, ``tuner.tune()``) are trusted to sync internally, so timing
@@ -151,8 +157,40 @@ class _Scope:
     def scan(self) -> None:
         body = getattr(self.node, "body", [])
         self._collect_jitted(body)
+        self._check_factory_jit(body)
         for block in self._blocks(body):
             self._scan_block(block)
+
+    # -- MS207: invocation factories must use the executable cache -----------
+    def _is_invocation_factory(self) -> bool:
+        """An invocation-factory scope: named like one, or returning a
+        sampler constructed by ``timed_sampler``/``steady_sampler``."""
+        node = self.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        if node.name in ("factory", "make_invocation"):
+            return True
+        for st in _walk_stmts(node.body):
+            if isinstance(st, ast.Return) and isinstance(st.value, ast.Call):
+                name = self.call_name(st.value)
+                leaf = name.rsplit(".", 1)[-1] if name else ""
+                if leaf in ("timed_sampler", "steady_sampler"):
+                    return True
+        return False
+
+    def _check_factory_jit(self, stmts: list[ast.stmt]) -> None:
+        if not self._is_invocation_factory():
+            return
+        for st in _walk_stmts(stmts):
+            for node in ast.walk(st):
+                if isinstance(node, ast.Call) \
+                        and self.call_name(node) == "jax.jit":
+                    self._flag("MS207", node,
+                               "jax.jit inside an invocation factory "
+                               "re-traces the kernel every outer-loop "
+                               "invocation — compile once through "
+                               "ExecutableCache.compile (see "
+                               "repro.core.exec_cache)")
 
     def _collect_jitted(self, stmts: list[ast.stmt]) -> None:
         """Names bound to jitted callables: ``f = jax.jit(g)`` or

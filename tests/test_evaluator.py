@@ -64,6 +64,53 @@ def test_timed_sampler_returns_rate():
     assert abs(sample() - 200.0) < 1e-6      # 100 units / 0.5 s
 
 
+def test_timed_sampler_subtracts_clock_overhead():
+    from repro.core.evaluator import ClockCalibration
+
+    ticks = iter([0.0, 0.6])
+    cal = ClockCalibration(resolution_s=0.0, overhead_s=0.1)
+    sample = timed_sampler(lambda: None, work=100.0,
+                           clock=lambda: next(ticks), calibration=cal)
+    assert abs(sample() - 200.0) < 1e-6      # 100 / (0.6 - 0.1)
+
+
+def test_timed_sampler_warns_once_under_clock_resolution():
+    import warnings
+
+    from repro.core.evaluator import ClockCalibration, TimingResolutionWarning
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1e-4                         # sample dt 1e-4 << 10x res
+        return t[0]
+
+    cal = ClockCalibration(resolution_s=1e-3, overhead_s=0.0)
+    sample = timed_sampler(lambda: None, work=1.0, clock=clock,
+                           calibration=cal)
+    with pytest.warns(TimingResolutionWarning):
+        first = sample()
+    # the reading is floored at the calibrated resolution, not 1e-12:
+    # a sub-resolution dt cannot fabricate a huge throughput
+    assert first == pytest.approx(1.0 / 1e-3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # one-shot: no second warning
+        sample()
+
+
+def test_calibrate_clock_caches_default_but_not_custom():
+    import time
+
+    from repro.core.evaluator import calibrate_clock
+
+    a = calibrate_clock()
+    assert a is calibrate_clock()            # per-process cache
+    assert a.resolution_s > 0.0
+    assert a.overhead_s >= 0.0
+    custom = calibrate_clock(time.perf_counter.__call__, samples=64)
+    assert custom is not a                   # fresh measurement
+
+
 def test_high_variance_hits_max_count(rng):
     s = EvaluationSettings(max_invocations=1, max_iterations=30,
                            max_time_s=60.0, use_ci_convergence=True)

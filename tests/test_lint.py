@@ -129,6 +129,59 @@ def test_ms206_partial_tuple_sync():
     assert "MS206" in codes(findings)
 
 
+def test_ms207_jit_in_factory():
+    findings = run_lint("""
+        import jax
+        from repro.core import timed_sampler
+
+        def make(kernel, x):
+            def factory():
+                f = jax.jit(kernel)
+                jax.block_until_ready(f(x))
+                return timed_sampler(lambda: jax.block_until_ready(f(x)),
+                                     work=1.0)
+            return factory
+    """)
+    assert "MS207" in codes(findings)
+
+
+def test_ms207_named_make_invocation():
+    findings = run_lint("""
+        import jax
+
+        def make_invocation():
+            return jax.jit(kernel)
+    """)
+    assert "MS207" in codes(findings)
+
+
+def test_ms207_cached_factory_clean():
+    findings = run_lint("""
+        import jax
+        from repro.core import default_cache, steady_sampler
+
+        def make(kernel, x):
+            def factory():
+                f = default_cache().compile(kernel, (x,))
+                jax.block_until_ready(f(x))
+                return steady_sampler(lambda: f(x), work=1.0,
+                                      sync=jax.block_until_ready)
+            return factory
+    """)
+    assert "MS207" not in codes(findings)
+
+
+def test_ms207_ignores_non_factory_scopes():
+    # a compile helper may call jax.jit — it is not an invocation factory
+    findings = run_lint("""
+        import jax
+
+        def compile_kernel(fn):
+            return jax.jit(fn)
+    """)
+    assert "MS207" not in codes(findings)
+
+
 def test_clean_harness_has_no_findings():
     findings = run_lint("""
         import time
@@ -278,7 +331,7 @@ def test_serve_prefill_sync_regression():
 def test_all_emitted_codes_are_registered():
     assert set(CODES) >= {"MS100", "MS101", "MS102", "MS103", "MS104",
                           "MS201", "MS202", "MS203", "MS204", "MS205",
-                          "MS206", "MS301", "MS302", "MS303"}
+                          "MS206", "MS207", "MS301", "MS302", "MS303"}
 
 
 def test_worst_severity_ordering():
