@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import (Direction, EvaluationSettings, SearchSpace,
                         default_cache, grid, steady_sampler, timed_sampler)
+from repro.core.profiling import trace_instant
 from repro.core.searchspace import doubling_from, powers_of_two
 from repro.lint import WorkloadSpec
 
@@ -126,6 +127,8 @@ def dgemm_invocation_factory(n: int, m: int, k: int,
                 state["data"] = (a, b)
         f = cache.compile(jnp.dot, (a, b))
         jax.block_until_ready(f(a, b))      # pre-heat
+        trace_instant("workload", kernel="dgemm", n=n, m=m, k=k,
+                      flops=flops, dtype=str(jnp.dtype(dtype)))
         if sampler == "steady":
             s = steady_sampler(lambda: f(a, b), work=flops / 1e9,
                                sync=jax.block_until_ready,
@@ -154,6 +157,8 @@ def triad_invocation_factory(n_bytes: int, dtype=jnp.float32, *,
         b = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
         f = cache.compile(triad_kernel, (a, b))
         jax.block_until_ready(f(a, b))
+        trace_instant("workload", kernel="triad", n=n, bytes=moved,
+                      dtype=str(jnp.dtype(dtype)))
 
         def run():
             jax.block_until_ready(f(a, b))
@@ -329,6 +334,8 @@ def chunked_dgemm_family(shape: dict) -> Callable:
                                   (chunks, kc, n), jnp.float32)
             f = cache.compile(chunked_dgemm_kernel, (a, b))
             jax.block_until_ready(f(a, b))      # pre-heat
+            trace_instant("workload", kernel="dgemm_sweep", m=m, n=n, k=k,
+                          k_chunk=kc, flops=flops)
 
             def run():
                 jax.block_until_ready(f(a, b))

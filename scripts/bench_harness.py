@@ -380,13 +380,24 @@ def main() -> int:
 
     path = pathlib.Path(args.json)
     if args.check:
-        return check(path)
+        return check(path)       # deterministic: no jax, no obs imports
 
-    doc = measure(reps=args.reps)
+    # the measuring run is itself traced: every legacy/fast session's
+    # trial/invocation/phase spans land in one JSONL + Perfetto artifact
+    # next to the JSON (uploaded by CI) — the harness eating its own
+    # observability dog food
+    from repro.obs import TraceRecorder, write_chrome_trace
+    trace_path = path.with_name(path.stem + ".trace.jsonl")
+    trace_path.unlink(missing_ok=True)   # append-only file: one run per artifact
+    with TraceRecorder(trace_path, session="bench-harness") as rec:
+        doc = measure(reps=args.reps)
+    perfetto = write_chrome_trace(
+        path.with_name(path.stem + ".perfetto.json"), rec.events())
     path.write_text(json.dumps(doc, indent=2, sort_keys=False) + "\n",
                     encoding="utf-8")
     print(render(doc))
     print(f"wrote {path}")
+    print(f"wrote {trace_path} and {perfetto}")
     return 0 if doc["checks"]["pass"] else 1
 
 

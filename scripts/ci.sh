@@ -62,4 +62,31 @@ echo "== perf gate (dry-run, non-blocking) =="
 # prints "nothing to gate" deterministically regardless of cwd defaults.
 python scripts/perf_gate.py --dry-run .tuning_sessions/history.jsonl
 
+echo "== traced smoke session =="
+# end-to-end observability gate: one tiny synthetic session with tracing
+# on must produce a non-empty trace whose trial spans cover every trial
+# and export to a clean Perfetto document (see docs/observability.md)
+SMOKE_DIR=$(mktemp -d)
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/tune.py \
+    --session ci-smoke --benchmark synthetic --backend thread:4 \
+    --cache-dir "$SMOKE_DIR" --trace > /dev/null
+SMOKE_DIR="$SMOKE_DIR" PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python - <<'EOF'
+import os
+from repro.obs import load_events, to_chrome_trace, validate_chrome_trace
+path = os.path.join(os.environ["SMOKE_DIR"], "ci-smoke.trace.jsonl")
+events = load_events(path)
+if not events:
+    raise SystemExit(f"empty or unparseable trace at {path}")
+trials = [e for e in events
+          if e.get("type") == "span" and e.get("cat") == "trial"]
+if len(trials) != 12:
+    raise SystemExit(f"expected 12 trial spans, got {len(trials)}")
+problems = validate_chrome_trace(to_chrome_trace(events))
+if problems:
+    raise SystemExit("Perfetto export invalid: " + "; ".join(problems))
+print(f"trace ok: {len(events)} events, {len(trials)} trial spans")
+EOF
+
 echo "== ci.sh: all green =="

@@ -13,6 +13,13 @@ gate exit non-zero — when the CI excludes zero AND the effect exceeds
 ``--min-effect`` (default 2%, the paper's early-termination error budget).
 Improvements and statistically-insignificant wobble pass.
 
+Under GitHub Actions (``GITHUB_ACTIONS=1``) every confirmed regression
+additionally emits a `workflow command
+<https://docs.github.com/actions/reference/workflow-commands-for-github-actions>`_
+annotation — ``::error`` (``::warning`` in ``--dry-run``) with
+``file=<ledger>,line=<N>`` pointing at the candidate run's exact ledger
+record, so the verdict surfaces inline on the PR's checks tab.
+
 Exit codes: 0 clean (or ``--dry-run``), 1 confirmed regression(s),
 2 usage errors (missing ledger outside ``--dry-run``).
 """
@@ -20,6 +27,8 @@ Exit codes: 0 clean (or ``--dry-run``), 1 confirmed regression(s),
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import pathlib
 import sys
 
@@ -33,6 +42,65 @@ from repro.history import RunLedger, detect_regressions  # noqa: E402
 from repro.history.regression import MIN_COUNT_WELCH, MIN_EFFECT  # noqa: E402
 
 DEFAULT_LEDGER = ".tuning_sessions/history.jsonl"
+
+
+def _esc_data(s: str) -> str:
+    """Workflow-command message escaping (the documented set)."""
+    return s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+
+
+def _esc_prop(s: str) -> str:
+    """Workflow-command property escaping: the message set plus the
+    property delimiters themselves."""
+    return _esc_data(s).replace(":", "%3A").replace(",", "%2C")
+
+
+def _ledger_line(path: pathlib.Path, benchmark: str, fingerprint: str,
+                 run: int):
+    """1-based line number of one run record in the ledger file, or None
+    (compacted away, or the file changed since the report was built)."""
+    try:
+        lines = path.read_text(encoding="utf-8").splitlines()
+    except OSError:
+        return None
+    for n, line in enumerate(lines, 1):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if (isinstance(rec, dict) and rec.get("benchmark") == benchmark
+                and rec.get("fingerprint") == fingerprint
+                and rec.get("run") == run):
+            return n
+    return None
+
+
+def emit_annotations(report, ledger_path: pathlib.Path,
+                     dry_run: bool = False, out=None) -> int:
+    """One GitHub Actions annotation per confirmed regression; returns
+    how many were emitted. ``--dry-run`` downgrades them to warnings
+    (reported on the PR but never red)."""
+    out = sys.stdout if out is None else out
+    level = "warning" if dry_run else "error"
+    n = 0
+    for s in report.series:
+        if s.verdict != "regressed" or s.comparison is None:
+            continue
+        c = s.comparison
+        loc = f"file={_esc_prop(str(ledger_path))}"
+        line = _ledger_line(ledger_path, s.benchmark, s.fingerprint,
+                            c.candidate.run)
+        if line is not None:
+            loc += f",line={line}"
+        title = _esc_prop(f"perf regression: {s.benchmark}")
+        msg = _esc_data(
+            f"{s.benchmark} @ {s.fingerprint}: run {c.candidate.run} mean "
+            f"{c.candidate.mean:.4g} vs best prior {c.baseline.mean:.4g} "
+            f"({c.rel_delta:+.2%}, CI [{c.interval.lo:.4g}, "
+            f"{c.interval.hi:.4g}])")
+        print(f"::{level} {loc},title={title}::{msg}", file=out)
+        n += 1
+    return n
 
 
 def main() -> int:
@@ -90,6 +158,8 @@ def main() -> int:
         direction=direction, min_effect=args.min_effect,
         min_count=args.min_count)
     sys.stdout.write(report.render_text())
+    if os.environ.get("GITHUB_ACTIONS", "").lower() in ("1", "true"):
+        emit_annotations(report, path, dry_run=args.dry_run)
     if args.dry_run:
         if not report.ok:
             print("perf-gate: dry-run — regressions reported but not "

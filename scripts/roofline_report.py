@@ -18,7 +18,9 @@ Welford moments, an ASCII roofline with achieved-kernel markers, a
 ``--html`` additionally writes a **self-contained HTML dashboard** (inline
 CSS/JS/SVG, no external deps); with ``--history LEDGER`` it also embeds
 per-series trend lines with CI bands and the regression verdicts from the
-performance-history ledger (see ``docs/history.md``).
+performance-history ledger (see ``docs/history.md``); with ``--trace
+TRACE`` it embeds a per-trial drill-down table from a session trace
+(``scripts/tune.py --trace``, see ``docs/observability.md``).
 """
 
 from __future__ import annotations
@@ -58,6 +60,10 @@ def main() -> int:
     ap.add_argument("--history", default=None, metavar="LEDGER",
                     help="run-ledger JSONL to embed trend lines and "
                          "regression verdicts into the --html dashboard")
+    ap.add_argument("--trace", default=None, metavar="TRACE",
+                    help="session trace JSONL (scripts/tune.py --trace) to "
+                         "embed a per-trial drill-down table into the "
+                         "--html dashboard")
     args = ap.parse_args()
 
     trials = []
@@ -113,12 +119,21 @@ def main() -> int:
                       file=sys.stderr)
                 return 2
             ledger = RunLedger(history_path)
+        trial_rows = ()
+        if args.trace:
+            trace_path = pathlib.Path(args.trace)
+            if not trace_path.exists():
+                print(f"error: no such trace: {args.trace}",
+                      file=sys.stderr)
+                return 2
+            from repro.obs import load_events, trial_summaries
+            trial_rows = trial_summaries(load_events(trace_path))
         stamp = time.strftime("%Y-%m-%d %H:%M UTC", time.gmtime())
         write_dashboard(args.html, reports, skipped, ledger=ledger,
                         title="Roofline & performance history",
                         subtitle=f"generated {stamp} from "
                                  f"{len(trials)} cached trials",
-                        confidence=args.confidence)
+                        confidence=args.confidence, trials=trial_rows)
         print(f"wrote {args.html}")
     return 0
 

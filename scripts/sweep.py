@@ -111,6 +111,11 @@ def main() -> int:
                     help="discard this campaign's cached trials first")
     ap.add_argument("--validate", default="warn",
                     choices=("off", "warn", "strict"))
+    ap.add_argument("--trace", nargs="?", const=True, default=False,
+                    metavar="PATH",
+                    help="record a span trace of the whole campaign "
+                         "(default path <cache-dir>/<session>.trace.jsonl; "
+                         "see docs/observability.md)")
     args = ap.parse_args()
 
     from benchmarks.common import (chunked_dgemm_family, gemm_shape_space,
@@ -159,7 +164,7 @@ def main() -> int:
     if not args.no_tune:
         import time
         result = campaign.run(holdout=holdout, backend=args.backend,
-                              timestamp=time.time())
+                              timestamp=time.time(), trace=args.trace)
         for o in result.outcomes:
             r = o.result
             print(f"  {shape_key(o.shape):>24s}: best={r.best_config} "
@@ -169,6 +174,8 @@ def main() -> int:
               f"{len(result.outcomes)} shapes "
               f"(exhaustive would be "
               f"{n_shapes * config_space.cardinality})")
+        if result.trace_path:
+            print(f"trace      : {result.trace_path}")
 
     oracle = campaign.oracle()
     regime = ("warm (joint model)" if oracle.is_warm()

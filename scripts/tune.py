@@ -149,6 +149,14 @@ def main() -> int:
                          "runs; 'strict' aborts on a mismatch")
     ap.add_argument("--fresh", action="store_true",
                     help="discard this session's cached trials first")
+    ap.add_argument("--trace", nargs="?", const=True, default=False,
+                    metavar="PATH",
+                    help="record a span trace of the whole session "
+                         "(default path <cache-dir>/<session>.trace.jsonl; "
+                         "see docs/observability.md)")
+    ap.add_argument("--live", action="store_true",
+                    help="print a live one-line campaign status to stderr "
+                         "(trials done/pruned/cached, exec-cache hits)")
     ap.add_argument("--report", action="store_true",
                     help="after tuning, render the cache-backed roofline "
                          "dashboard from this session's trial cache")
@@ -209,7 +217,8 @@ def main() -> int:
     session = TuningSession(args.session, tuner, benchmark,
                             cache_dir=args.cache_dir,
                             warm_start=not args.no_warm_start,
-                            benchmark_name=args.benchmark)
+                            benchmark_name=args.benchmark,
+                            trace=args.trace)
 
     seeds = []
     if args.transfer_from is not None:
@@ -235,6 +244,20 @@ def main() -> int:
           f"({session.cache.n_stale} stale skipped)")
 
     done = 0
+    if args.live:
+        from repro.core import default_cache
+        from repro.obs.metrics import metrics as obs_metrics
+        live_base = obs_metrics().snapshot()
+        exec_base = default_cache().stats
+
+    def live_status():
+        c = obs_metrics().delta(live_base).get("counters", {})
+        x = default_cache().stats.delta(exec_base)
+        line = (f"trials {c.get('trials.completed', 0)} "
+                f"(pruned {c.get('trials.pruned', 0)}, "
+                f"cached {c.get('trials.cached', 0)}) | "
+                f"exec-cache hits {x.hits} compiles {x.compiles}")
+        print(f"\r[live] {line}   ", end="", file=sys.stderr, flush=True)
 
     def progress(cfg, res):
         nonlocal done
@@ -242,12 +265,16 @@ def main() -> int:
         tag = "PRUNED" if res.pruned else f"{res.score:10.2f}"
         print(f"  [{done:4d}/{space.cardinality}] {cfg} -> {tag} "
               f"({res.stop_reason})")
+        if args.live:
+            live_status()
 
     import time
 
     result = session.run(backend=args.backend, progress=progress,
                          seeds=seeds, timestamp=time.time(),
                          validate=args.validate)
+    if args.live:
+        print(file=sys.stderr)   # terminate the \r status line
     print(f"\nbest      : {result.best_config}  score={result.best_score}")
     print(f"trials    : {len(result.trials)}  cached={result.n_cached}  "
           f"pruned={result.n_pruned}  samples={result.total_samples}")
@@ -260,6 +287,8 @@ def main() -> int:
         trail = " -> ".join(f"{score:.2f}"
                             for _, score in result.improvements)
         print(f"incumbent : {trail}")
+    if result.trace_path:
+        print(f"trace     : {result.trace_path}")
 
     if args.history:
         from repro.history import detect_regressions, render_trend_text

@@ -43,6 +43,8 @@ import threading
 from pathlib import Path
 from typing import Iterable, Iterator, Optional
 
+from repro.obs.metrics import metrics as obs_metrics
+
 from .confidence import spearman
 from .evaluator import EvalResult, InvocationResult
 from .searchspace import Config
@@ -328,6 +330,9 @@ class TrialCache:
                 finally:
                     if fcntl is not None:
                         fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+        reg = obs_metrics()
+        reg.inc("cache.appends")
+        reg.inc("cache.bytes_written", len(line) + 1)
 
     def best(self, benchmark: str, direction: Direction,
              settings_key: Optional[str] = None,
@@ -539,6 +544,12 @@ class TuningSession:
     detectable later (``repro.history``, ``scripts/perf_gate.py``). Pass
     ``ledger=None`` to disable, or a :class:`~repro.history.ledger.RunLedger`
     (or path) to redirect.
+
+    ``trace=True`` records a span trace of every ``run()`` to
+    ``<cache_dir>/<name>.trace.jsonl`` (a path redirects it); the result
+    carries it as ``TuningResult.trace_path``. When a recorder is
+    already installed (an enclosing campaign or test owns it), the
+    session joins that trace instead of opening its own.
     """
 
     def __init__(self, name: str, tuner, benchmark,
@@ -547,7 +558,8 @@ class TuningSession:
                  fingerprint: Optional[str] = None,
                  benchmark_name: Optional[str] = None,
                  ledger=AUTO_LEDGER,
-                 campaign: Optional[str] = None):
+                 campaign: Optional[str] = None,
+                 trace: "bool | str | os.PathLike" = False):
         self.name = name
         self.tuner = tuner
         self.benchmark = benchmark
@@ -558,6 +570,11 @@ class TuningSession:
         # grid-tuning pass is recognizable as a unit in history tooling
         self.campaign = campaign
         self.warm_start = warm_start
+        self.trace = trace
+        self.trace_path: Optional[Path] = None
+        if trace:
+            self.trace_path = (Path(cache_dir) / f"{name}.trace.jsonl"
+                               if trace is True else Path(trace))
         self.cache = TrialCache(Path(cache_dir) / f"{name}.jsonl",
                                 fingerprint=fingerprint)
         if ledger is AUTO_LEDGER or isinstance(ledger, (str, os.PathLike)):
@@ -578,15 +595,26 @@ class TuningSession:
         ``validate`` gates the pre-run workload audit exactly as in
         ``Tuner.tune`` — strict mode fails the session before any trial
         (or cache read) happens."""
+        import contextlib
+
         bound_ledger = None
         if self.ledger is not None:
             bound_ledger = self.ledger.bound(self.benchmark_name,
                                              self.cache.fingerprint,
                                              session=self.name,
                                              campaign=self.campaign)
-        return self.tuner.tune(self.benchmark, progress=progress,
-                               backend=backend,
-                               cache=self.cache.bound(self.benchmark_name),
-                               warm_start=self.warm_start,
-                               seeds=seeds, ledger=bound_ledger,
-                               timestamp=timestamp, validate=validate)
+        with contextlib.ExitStack() as stack:
+            if self.trace_path is not None:
+                # deferred import + already-active check: an enclosing
+                # campaign/test recorder wins, the session joins its trace
+                from repro.obs.trace import TraceRecorder, recorder
+                if recorder() is None:
+                    stack.enter_context(TraceRecorder(self.trace_path,
+                                                      session=self.name))
+            return self.tuner.tune(self.benchmark, progress=progress,
+                                   backend=backend,
+                                   cache=self.cache.bound(
+                                       self.benchmark_name),
+                                   warm_start=self.warm_start,
+                                   seeds=seeds, ledger=bound_ledger,
+                                   timestamp=timestamp, validate=validate)

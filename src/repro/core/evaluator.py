@@ -23,7 +23,8 @@ import warnings
 from typing import Any, Callable, Optional, Sequence, Union
 
 from . import welford
-from .profiling import phase, profiler
+from .profiling import (phase, record_phase, trace_instant, trace_sink,
+                        trace_span)
 from .stop_conditions import (CIConverged, Direction, EvalContext, MaxCount,
                               MaxTime, StopCondition, StopDecision,
                               UpperBoundPrune, first_decision)
@@ -97,6 +98,12 @@ class EvaluationSettings:
     ci_method: str = "welford"
     bootstrap_capacity: int = 256
     bootstrap_resamples: int = 200
+    # Opt-in on-device timing (repro.obs.device_timing): when a trace
+    # recorder is installed, trials that beat the incumbent get one extra
+    # profiled invocation whose device-side kernel time and host-vs-device
+    # skew land in the trace. Off-GPU/TPU it degrades to an
+    # "unavailable" instant. Never touches the measured samples.
+    device_timing: bool = False
 
     def label(self) -> str:
         """Technique label as used in the paper's tables, e.g. 'C+I+O'."""
@@ -214,9 +221,14 @@ class Evaluator:
         direction = s.direction
         best_inv: Optional[float] = None
         while True:
-            with phase("setup"):
-                sample_fn = make_invocation()
-            inv = self._run_invocation(sample_fn, incumbent, inner_conds)
+            with trace_span("invocation", cat="invocation",
+                            n=len(invocations) + 1) as ispan:
+                with phase("setup"):
+                    sample_fn = make_invocation()
+                inv = self._run_invocation(sample_fn, incumbent,
+                                           inner_conds)
+                ispan.set(mean=inv.mean, count=inv.count,
+                          stop_reason=inv.stop_reason, pruned=inv.pruned)
             invocations.append(inv)
             measured += inv.elapsed_s
             pruned = pruned or inv.pruned
@@ -237,6 +249,9 @@ class Evaluator:
             if inv.pruned:
                 decision = StopDecision(reason="inner_pruned", pruned=True)
                 break
+        if s.device_timing and not pruned:
+            self._device_profile(sample_fn, float(outer_state.mean),
+                                 incumbent, direction)
         return EvalResult(score=float(outer_state.mean),
                           best_invocation=float(best_inv),
                           invocations=tuple(invocations),
@@ -245,6 +260,31 @@ class Evaluator:
                           measured_time_s=measured,
                           pruned=pruned,
                           stop_reason=decision.reason)
+
+    # -- on-device timing -----------------------------------------------------
+    def _device_profile(self, sample_fn: Callable[[], float], score: float,
+                        incumbent: Incumbent, direction: Direction) -> None:
+        """One extra profiled invocation for incumbent-candidate trials.
+
+        Only runs when a trace recorder is installed (the result is a
+        trace attribute, nothing else consumes it) and only for scores
+        that beat the current incumbent — profiling slows the profiled
+        call, so doomed configurations never pay for it.
+        """
+        if trace_sink() is None:
+            return
+        inc = _resolve_incumbent(incumbent)
+        if inc is not None and not direction.better(score, inc):
+            return
+        try:
+            from repro.obs.device_timing import profile_sample
+            timing = profile_sample(sample_fn)
+        except Exception:
+            timing = None
+        if timing is None:
+            trace_instant("device_timing_unavailable")
+        else:
+            trace_instant("device_timing", **timing.to_json())
 
 
 class TimingResolutionWarning(UserWarning):
@@ -330,6 +370,9 @@ def timed_sampler(fn: Callable[[], None], work: float,
     resolution = calibration.resolution_s if calibration else 0.0
     floor = resolution if resolution > 0.0 else 1e-12
     warned = [False]
+    # clock readings only mark trace positions when they share the
+    # recorder's clock; fake test clocks fall back to "now"
+    default_clock = clock is time.perf_counter
 
     def sample() -> float:
         t0 = clock()
@@ -344,9 +387,8 @@ def timed_sampler(fn: Callable[[], None], work: float,
                 f"larger per-call workload", TimingResolutionWarning,
                 stacklevel=2)
         dt = max(dt, floor)
-        prof = profiler()
-        if prof is not None:
-            prof.add("dispatch", t1 - t0)
+        record_phase("dispatch", t1 - t0,
+                     at=t1 if default_clock else None)
         return work / dt
 
     return sample
@@ -446,6 +488,7 @@ def steady_sampler(dispatch: Callable[[], Any], work: float, *,
     clock_overhead = 2.0 * calibration.overhead_s if calibration else 0.0
     total_work = work * batch
     b = batch
+    default_clock = clock is time.perf_counter
 
     def sample() -> float:
         t0 = clock()
@@ -456,10 +499,10 @@ def steady_sampler(dispatch: Callable[[], Any], work: float, *,
         sync(h)
         t1 = clock()
         dt = max(t1 - t0 - clock_overhead, 1e-12)
-        prof = profiler()
-        if prof is not None:
-            prof.add("dispatch", tm - t0)
-            prof.add("sync", t1 - tm)
+        record_phase("dispatch", tm - t0,
+                     at=tm if default_clock else None)
+        record_phase("sync", t1 - tm,
+                     at=t1 if default_clock else None)
         return total_work / dt
 
     sample.batch = batch

@@ -34,7 +34,7 @@ import time
 from collections import OrderedDict
 from typing import Any, Callable, Mapping, Optional, Sequence
 
-from .profiling import phase
+from .profiling import phase, trace_instant
 
 __all__ = ["CompilePipeline", "ExecCacheStats", "ExecutableCache",
            "default_cache"]
@@ -75,6 +75,22 @@ class ExecCacheStats:
         return {"hits": self.hits, "misses": self.misses,
                 "compiles": self.compiles, "evictions": self.evictions,
                 "compile_time_s": self.compile_time_s, "size": self.size}
+
+    def delta(self, since: "ExecCacheStats") -> "ExecCacheStats":
+        """Counter movement between two snapshots of the *same* cache.
+
+        ``size`` stays absolute (it is a level, not a counter).  This is
+        how sessions report per-session cache activity without resetting
+        the process-global cache under concurrent sessions: snapshot at
+        ``tune()`` entry, ``stats.delta(entry_snapshot)`` at exit.
+        """
+        return ExecCacheStats(
+            hits=self.hits - since.hits,
+            misses=self.misses - since.misses,
+            compiles=self.compiles - since.compiles,
+            evictions=self.evictions - since.evictions,
+            compile_time_s=self.compile_time_s - since.compile_time_s,
+            size=self.size)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"ExecCacheStats(hits={self.hits}, misses={self.misses}, "
@@ -160,6 +176,12 @@ class ExecutableCache:
                 self._misses += 1
                 owner = True
         if not owner:
+            if entry.ready.is_set():
+                trace_instant("exec_cache_hit",
+                              fn=getattr(fn, "__qualname__", repr(fn)))
+            else:                  # racing a compile in flight: dedup-wait
+                trace_instant("exec_cache_dedup",
+                              fn=getattr(fn, "__qualname__", repr(fn)))
             entry.ready.wait()     # hit, possibly still compiling elsewhere
             if entry.error is not None:
                 raise entry.error

@@ -52,6 +52,7 @@ from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Callable, Iterable, Mapping, Optional, Sequence, Union
 
 from .evaluator import EvalResult, EvaluationSettings, Incumbent
+from .profiling import trace_instant, trace_span
 from .searchspace import Config
 from .stop_conditions import Direction
 
@@ -170,6 +171,38 @@ class ExecutionStats:
 BatchSource = Union[Iterable[Batch], Sequence[Config]]
 
 
+def _traced_trial(clock: Callable[[], float], evaluate: EvaluateFn,
+                  cfg: Config, incumbent: Incumbent,
+                  settings: Optional[EvaluationSettings],
+                  cell: Optional[IncumbentCell], index: int, worker: int,
+                  ) -> tuple[EvalResult, float]:
+    """Evaluate one configuration inside a ``cat="trial"`` trace span.
+
+    Runs on the thread that executes the trial, so the span lands on the
+    right tid with the evaluator's invocation/phase spans nested inside.
+    ``cell`` non-None folds the score into the live incumbent (serial and
+    thread backends); round-synchronized backends pass ``None`` and
+    all-reduce at the round end, emitting their improvement instants
+    there instead.
+    """
+    with trace_span("trial", cat="trial", index=index,
+                    config=dict(cfg)) as span:
+        t1 = clock()
+        res = evaluate(cfg, incumbent, settings)
+        dt = clock() - t1
+        improved = False
+        if res.pruned:
+            trace_instant("trial_pruned", reason=res.stop_reason)
+        elif cell is not None:
+            improved = cell.offer(cfg, res.score)
+            if improved:
+                trace_instant("incumbent_improved", score=res.score)
+        span.set(score=res.score, pruned=res.pruned,
+                 stop_reason=res.stop_reason, samples=res.total_samples,
+                 worker=worker, improved=improved)
+    return res, dt
+
+
 class ExecutionBackend:
     """Schedules evaluations over strategy-proposed batches.
 
@@ -274,11 +307,9 @@ class SerialBackend(ExecutionBackend):
                    persist, base_index):
         outcomes: list[TrialOutcome] = []
         for j, cfg in enumerate(batch.configs):
-            t1 = self.clock()
-            res = evaluate(cfg, cell.get, batch.settings)
-            dt = self.clock() - t1
-            if not res.pruned:
-                cell.offer(cfg, res.score)
+            res, dt = _traced_trial(self.clock, evaluate, cfg, cell.get,
+                                    batch.settings, cell, base_index + j,
+                                    worker=0)
             out = TrialOutcome(index=base_index + j, config=cfg, result=res,
                                elapsed_s=dt)
             outcomes.append(out)
@@ -325,11 +356,9 @@ class ThreadPoolBackend(ExecutionBackend):
         lock = ctx["progress_lock"]
 
         def work(j: int, cfg: Config) -> TrialOutcome:
-            t1 = self.clock()
-            res = evaluate(cfg, cell.get, batch.settings)
-            dt = self.clock() - t1
-            if not res.pruned:
-                cell.offer(cfg, res.score)
+            res, dt = _traced_trial(self.clock, evaluate, cfg, cell.get,
+                                    batch.settings, cell, base_index + j,
+                                    worker=j % self.n_workers)
             out = TrialOutcome(index=base_index + j, config=cfg, result=res,
                                elapsed_s=dt)
             if persist is not None:
@@ -392,9 +421,9 @@ class SimulatedShardedBackend(ExecutionBackend):
         outcomes: list[TrialOutcome] = []
         for j, cfg in enumerate(batch.configs):
             w = j % self.n_workers
-            t1 = self.clock()
-            res = evaluate(cfg, frozen, batch.settings)
-            dt = self.clock() - t1
+            res, dt = _traced_trial(self.clock, evaluate, cfg, frozen,
+                                    batch.settings, None, base_index + j,
+                                    worker=w)
             ctx["worker_time"][w] += dt
             out = TrialOutcome(index=base_index + j, config=cfg,
                                result=res, worker=w, elapsed_s=dt)
@@ -404,8 +433,10 @@ class SimulatedShardedBackend(ExecutionBackend):
             if progress is not None:
                 progress(cfg, res)
         for out in outcomes:            # the round's all-reduce
-            if not out.result.pruned:
-                cell.offer(out.config, out.result.score)
+            if not out.result.pruned and cell.offer(out.config,
+                                                    out.result.score):
+                trace_instant("incumbent_improved",
+                              score=out.result.score, trial=out.index)
         if observe is not None:
             for out in outcomes:
                 observe(out)
@@ -501,11 +532,18 @@ class ProcessPoolBackend(ExecutionBackend):
             out = TrialOutcome(index=base_index + j, config=cfg, result=res,
                                worker=j % self.n_workers, elapsed_s=dt)
             outcomes.append(out)
+            # worker processes carry no recorder, so trials surface as
+            # parent-side instants (timing measured inside the worker)
+            trace_instant("trial_completed", index=out.index,
+                          score=res.score, pruned=res.pruned,
+                          worker=out.worker, elapsed_s=dt)
             if persist is not None:     # parent-side, as futures land
                 persist(out)
         for out in outcomes:            # the batch's all-reduce
-            if not out.result.pruned:
-                cell.offer(out.config, out.result.score)
+            if not out.result.pruned and cell.offer(out.config,
+                                                    out.result.score):
+                trace_instant("incumbent_improved",
+                              score=out.result.score, trial=out.index)
         for out in outcomes:
             if observe is not None:
                 observe(out)

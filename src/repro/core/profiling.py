@@ -19,11 +19,20 @@ each records its own wall time independently, so buckets are a
 non-measured metric from session wall clock and kernel-time references,
 and uses these buckets to explain where the overhead went.
 
-Instrumentation sites call :func:`phase`, which is a no-op (one global
-read, no allocation) unless a :class:`PhaseProfiler` is installed — the
-hot per-sample paths stay hardware-fast when nobody is profiling.
-Thread-safe: concurrent trials on the thread backend fold into the same
-buckets under a lock.
+Instrumentation sites call :func:`phase`, which is a no-op (two global
+reads, no allocation) unless a :class:`PhaseProfiler` *or* a trace sink
+is installed — the hot per-sample paths stay hardware-fast when nobody
+is watching.  Thread-safe: concurrent trials on the thread backend fold
+into the same buckets under a lock.
+
+The module is also the **dual-sink seam** for ``repro.obs``: a
+:class:`~repro.obs.trace.TraceRecorder` installs itself via
+:func:`set_trace_sink`, after which every :func:`phase` site feeds both
+the aggregate buckets (when a profiler is active) and a per-thread span
+in the trace — per-trial attribution the folded buckets cannot give.
+Core modules never import ``repro.obs``; they call the sink-agnostic
+helpers here (:func:`trace_span`, :func:`trace_instant`,
+:func:`record_phase`), which no-op when no recorder is installed.
 """
 
 from __future__ import annotations
@@ -32,7 +41,9 @@ import threading
 import time
 from typing import Callable, Optional
 
-__all__ = ["PhaseProfiler", "PhaseStats", "phase", "profiler"]
+__all__ = ["PhaseProfiler", "PhaseStats", "phase", "profiler",
+           "record_phase", "set_trace_sink", "trace_instant", "trace_sink",
+           "trace_span"]
 
 
 class PhaseStats:
@@ -49,7 +60,7 @@ class PhaseStats:
 
 
 class _NullPhase:
-    """Shared no-op context manager returned when no profiler is active."""
+    """Shared no-op context manager returned when no sink is active."""
 
     __slots__ = ()
 
@@ -58,6 +69,9 @@ class _NullPhase:
 
     def __exit__(self, *exc):
         return False
+
+    def set(self, **attrs):
+        return None
 
 
 _NULL = _NullPhase()
@@ -142,15 +156,98 @@ class PhaseProfiler:
 _INSTALL_LOCK = threading.Lock()
 _ACTIVE: Optional[PhaseProfiler] = None
 
+# the installed TraceRecorder (repro.obs.trace), or None; duck-typed so
+# this module never has to import obs
+_TRACE = None
+
 
 def profiler() -> Optional[PhaseProfiler]:
     """The currently installed profiler, or ``None``."""
     return _ACTIVE
 
 
+def set_trace_sink(sink) -> None:
+    """Install/clear the trace sink (called by ``TraceRecorder``)."""
+    global _TRACE
+    _TRACE = sink
+
+
+def trace_sink():
+    """The installed trace sink, or ``None`` when tracing is off."""
+    return _TRACE
+
+
+class _DualPhase:
+    """One ``phase()`` site feeding bucket and/or span sinks."""
+
+    __slots__ = ("name", "_prof", "_sink", "_span", "_bucket")
+
+    def __init__(self, name: str, prof: Optional[PhaseProfiler], sink):
+        self.name = name
+        self._prof = prof
+        self._sink = sink
+        self._span = None
+        self._bucket = None
+
+    def __enter__(self):
+        if self._prof is not None:
+            self._bucket = self._prof.phase(self.name).__enter__()
+        self._span = self._sink.span(self.name, cat="phase").__enter__()
+        return self
+
+    def set(self, **attrs):
+        self._span.set(**attrs)
+
+    def __exit__(self, *exc):
+        self._span.__exit__(*exc)
+        if self._bucket is not None:
+            self._bucket.__exit__(*exc)
+        return False
+
+
 def phase(name: str):
-    """Context manager timing one phase span; free when not profiling."""
+    """Context manager timing one phase span; free when nobody watches.
+
+    Dual-sink: feeds the active :class:`PhaseProfiler` buckets and the
+    active trace sink's span tree, whichever (or both) is installed.
+    """
     active = _ACTIVE
-    if active is None:
+    sink = _TRACE
+    if sink is None:
+        if active is None:
+            return _NULL
+        return active.phase(name)
+    return _DualPhase(name, active, sink)
+
+
+def record_phase(name: str, seconds: float,
+                 at: Optional[float] = None) -> None:
+    """Record an interval the caller already measured, into both sinks.
+
+    The samplers use this for their hot-loop deltas (clock readings are
+    already taken; a context manager would add overhead).  ``at`` is the
+    interval's end on ``time.perf_counter`` so adjacent phases land
+    adjacent in the trace; ``None`` means "now".
+    """
+    active = _ACTIVE
+    if active is not None:
+        active.add(name, seconds)
+    sink = _TRACE
+    if sink is not None:
+        sink.add_phase(name, seconds, at=at)
+
+
+def trace_span(name: str, cat: str = "phase", *, context: bool = False,
+               **attrs):
+    """Open a span on the trace sink; shared no-op when tracing is off."""
+    sink = _TRACE
+    if sink is None:
         return _NULL
-    return active.phase(name)
+    return sink.span(name, cat=cat, context=context, **attrs)
+
+
+def trace_instant(name: str, **attrs) -> None:
+    """Emit an instant event on the trace sink, if one is installed."""
+    sink = _TRACE
+    if sink is not None:
+        sink.instant(name, **attrs)

@@ -21,10 +21,10 @@ from typing import Callable, Optional, Sequence
 
 from .evaluator import (EvalResult, EvaluationSettings, Evaluator, Incumbent,
                         InvocationFactory)
-from .exec_cache import CompilePipeline
+from .exec_cache import CompilePipeline, default_cache
 from .executor import (Batch, BatchStats, ExecutionBackend, IncumbentCell,
                        SerialBackend, TrialOutcome)
-from .profiling import phase
+from .profiling import phase, trace_instant, trace_sink, trace_span
 from .searchspace import Config, SearchSpace
 from .strategy import ExhaustiveStrategy, SearchStrategy, SuccessiveHalvingStrategy
 
@@ -60,6 +60,8 @@ class EvaluateTask:
 
     def __call__(self, config: Config, incumbent: Incumbent,
                  settings: Optional[EvaluationSettings] = None) -> EvalResult:
+        from repro.obs.metrics import metrics
+        metrics().inc("trials.started")
         evaluator = Evaluator(settings or self.settings, clock=self.clock)
         return evaluator.evaluate(self.benchmark(config), incumbent=incumbent)
 
@@ -88,6 +90,13 @@ class TuningResult:
     batches: tuple[BatchStats, ...] = ()   # one entry per strategy round
     n_seeded: int = 0              # transfer seeds injected into the search
     n_precompiled: int = 0         # executables compiled by the pipeline
+    # observability (repro.obs): the session's trace file (None when
+    # tracing was off), the per-session MetricsRegistry delta, and the
+    # per-session ExecCacheStats delta of the shared process cache —
+    # deltas, so back-to-back sessions never report each other's counts
+    trace_path: Optional[str] = None
+    metrics: Optional[dict] = None
+    exec_cache: Optional[dict] = None
 
     def summary_row(self) -> dict:
         return {
@@ -178,8 +187,11 @@ class Tuner:
         caller to close). The cache's in-flight deduplication guarantees
         a trial never compiles what the pipeline already started.
         """
+        from repro.obs.metrics import metrics as obs_metrics
+
         from .cache import settings_key
 
+        reg = obs_metrics()
         if validate not in ("off", "warn", "strict"):
             raise ValueError(f"validate must be 'off', 'warn' or 'strict', "
                              f"got {validate!r}")
@@ -240,6 +252,11 @@ class Tuner:
                         if not hit.pruned:
                             cell.offer(cfg, hit.score)
                         strategy.tell(cfg, hit)
+                        trace_instant("cache_hit", config=dict(cfg),
+                                      score=hit.score, pruned=hit.pruned,
+                                      stop_reason=hit.stop_reason,
+                                      samples=hit.total_samples)
+                        reg.inc("trials.cached")
                         records.append(TrialRecord(config=cfg, result=hit,
                                                    cached=True))
                         if progress is not None:
@@ -264,6 +281,9 @@ class Tuner:
             # called by the backend as soon as the trial finishes — from
             # the worker thread on concurrent backends (TrialCache.put is
             # thread-safe) — so a killed run keeps every completed trial
+            reg.inc("trials.completed")
+            if outcome.result.pruned:
+                reg.inc("trials.pruned")
             if cache is not None:
                 with phase("cache_io"):
                     cache.put(outcome.config, outcome.result,
@@ -277,10 +297,23 @@ class Tuner:
                                        worker=outcome.worker))
 
         t0 = self.clock()
+        # per-session observability deltas: snapshot the process-global
+        # registries at entry, report only the movement at exit
+        metrics_at_entry = reg.snapshot()
+        exec_at_entry = default_cache().stats
+        recorder = trace_sink()
         try:
-            _, stats = backend.run(batches(), evaluate, cell,
-                                   progress=progress, observe=observe,
-                                   persist=persist)
+            with trace_span(
+                    "tune", cat="session", context=True,
+                    strategy=strategy.name,
+                    backend=getattr(backend, "name", "?"),
+                    n_workers=getattr(backend, "n_workers", 1),
+                    settings=self.settings.label(),
+                    settings_key=session_key) as session_span:
+                _, stats = backend.run(batches(), evaluate, cell,
+                                       progress=progress, observe=observe,
+                                       persist=persist)
+                session_span.set(n_trials=len(records))
         finally:
             n_precompiled = 0
             if pipeline is not None:
@@ -289,6 +322,16 @@ class Tuner:
                     # any) finishes — never kill a compile mid-way
                     pipeline.close(wait=False)
                 n_precompiled = pipeline.counts[1]
+        exec_delta = default_cache().stats.delta(exec_at_entry)
+        for key, moved in (("exec_cache.hits", exec_delta.hits),
+                           ("exec_cache.misses", exec_delta.misses),
+                           ("exec_cache.compiles", exec_delta.compiles)):
+            if moved:
+                reg.inc(key, moved)
+        metrics_delta = reg.delta(metrics_at_entry)
+        if recorder is not None:
+            recorder.meta_event(metrics=metrics_delta,
+                                exec_cache=exec_delta.to_json())
         best_cfg, best_score = cell.snapshot()
         trials = tuple(records)
         result = TuningResult(
@@ -310,6 +353,11 @@ class Tuner:
             batches=stats.batches,
             n_seeded=len(projected),
             n_precompiled=n_precompiled,
+            trace_path=str(recorder.path)
+            if recorder is not None and getattr(recorder, "path", None)
+            else None,
+            metrics=metrics_delta,
+            exec_cache=exec_delta.to_json(),
         )
         if ledger is not None:
             # duck-typed BoundLedger so core never imports repro.history

@@ -38,6 +38,7 @@ from typing import Iterator, Optional
 
 from repro.core import welford
 from repro.core.cache import config_key
+from repro.obs.metrics import metrics as obs_metrics
 from repro.core.searchspace import Config
 from repro.core.stop_conditions import Direction
 from repro.core.welford import WelfordState
@@ -250,7 +251,8 @@ class RunLedger:
                     if fcntl is not None:
                         fcntl.flock(f.fileno(), fcntl.LOCK_UN)
             runs.append(record)
-            return record
+        obs_metrics().inc("ledger.appends")
+        return record
 
     @contextlib.contextmanager
     def _locked_file(self, fcntl):

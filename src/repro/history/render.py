@@ -316,19 +316,67 @@ def _verdict_section(report: RegressionReport) -> str:
     ])
 
 
+#: drill-down row cap — campaigns can trace thousands of trials; the
+#: dashboard shows the first N and says how many it dropped
+_MAX_TRIAL_ROWS = 200
+
+
+def _flags(row: dict) -> str:
+    out = []
+    if row.get("improved"):
+        out.append('<span class="trial-improved" title="new incumbent">★'
+                   "</span>")
+    if row.get("pruned"):
+        out.append("pruned")
+    if row.get("cached"):
+        out.append("cached")
+    return " ".join(out) or "—"
+
+
+def _trials_section(trials: Sequence[dict]) -> str:
+    """Per-trial drill-down from a trace's ``trial_summaries`` rows."""
+    shown = list(trials)[:_MAX_TRIAL_ROWS]
+    rows = []
+    for r in shown:
+        phases = ", ".join(f"{_esc(k)} {v * 1e3:.2f}ms"
+                           for k, v in (r.get("phases") or {}).items())
+        cfg = config_key(r["config"]) if r.get("config") else "—"
+        score = "—" if r.get("score") is None else f"{r['score']:.4g}"
+        worker = "—" if r.get("worker") is None else str(r["worker"])
+        rows.append([
+            "—" if r.get("index") is None else str(r["index"]),
+            f"<code>{_esc(cfg)}</code>", score,
+            "—" if r.get("samples") is None else str(r["samples"]),
+            str(r.get("invocations", 0)),
+            _esc(r.get("stop_reason") or "—"),
+            f"{r.get('dur_s', 0.0) * 1e3:.2f}",
+            worker, phases or "—", _flags(r)])
+    dropped = len(trials) - len(shown)
+    note = f" (first {len(shown)} of {len(trials)})" if dropped else ""
+    return "\n".join([
+        "<h2>Trial drill-down</h2>",
+        f"<p class=\"meta\">{len(trials)} traced trial(s){note}.</p>",
+        _table(["trial", "config", "score", "samples", "invocations",
+                "stop", "wall ms", "worker", "phases", "flags"], rows),
+    ])
+
+
 def render_html(reports: Sequence = (), skipped: Sequence[tuple[str, str]] = (),
                 ledger: Optional[RunLedger] = None,
                 regression: Optional[RegressionReport] = None,
                 title: str = "Performance history dashboard",
                 subtitle: Optional[str] = None,
-                confidence: float = 0.99) -> str:
+                confidence: float = 0.99,
+                trials: Sequence[dict] = ()) -> str:
     """Assemble the self-contained dashboard.
 
     Every argument is optional: a cache-only call renders roofline
     summaries, a ledger-only call renders trends (and verdicts when a
-    ``regression`` report is supplied). ``subtitle`` is caller-supplied
-    display text (e.g. a generation timestamp) — this function itself
-    never reads a clock, so output is deterministic for golden tests.
+    ``regression`` report is supplied). ``trials`` is a sequence of
+    ``repro.obs.export.trial_summaries`` rows rendered as a per-trial
+    drill-down table. ``subtitle`` is caller-supplied display text
+    (e.g. a generation timestamp) — this function itself never reads a
+    clock, so output is deterministic for golden tests.
     """
     sections: list[str] = []
     if regression is not None:
@@ -341,6 +389,8 @@ def render_html(reports: Sequence = (), skipped: Sequence[tuple[str, str]] = (),
             if runs:
                 sections.append(_trend_section(benchmark, fingerprint, runs,
                                                confidence))
+    if trials:
+        sections.append(_trials_section(list(trials)))
     if skipped:
         items = "".join(f"<li><code>{_esc(fp)}</code>: {_esc(reason)}</li>"
                         for fp, reason in skipped)
@@ -362,7 +412,8 @@ def write_dashboard(path, reports: Sequence = (),
                     ledger: Optional[RunLedger] = None,
                     title: str = "Performance history dashboard",
                     subtitle: Optional[str] = None,
-                    confidence: float = 0.99) -> Path:
+                    confidence: float = 0.99,
+                    trials: Sequence[dict] = ()) -> Path:
     """The CLI recipe shared by ``roofline_report.py --html`` and
     ``benchmarks/run.py --html``: detect regressions over the ledger
     (when one is given), render, write. Returns the written path."""
@@ -370,7 +421,8 @@ def write_dashboard(path, reports: Sequence = (),
                   if ledger is not None else None)
     html = render_html(reports, skipped, ledger=ledger,
                        regression=regression, title=title,
-                       subtitle=subtitle, confidence=confidence)
+                       subtitle=subtitle, confidence=confidence,
+                       trials=trials)
     out = Path(path)
     out.write_text(html, encoding="utf-8")
     return out

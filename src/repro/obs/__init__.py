@@ -1,0 +1,31 @@
+"""Observability: span tracing, metrics, Perfetto export, device timing.
+
+The subsystem is deliberately import-light: no module here imports
+``repro.core`` at module level, so core modules (cache, ledger) may
+import :mod:`repro.obs.metrics` at the top of the file without creating
+a cycle.  The :class:`TraceRecorder` reaches back into
+``repro.core.profiling`` only at install time (``__enter__``) to wire
+itself in as the trace sink behind the dual-sink ``phase()`` helpers.
+"""
+
+from .device_timing import DeviceTiming, device_timing_available, profile_sample
+from .export import (load_events, to_chrome_trace, trial_summaries,
+                     validate_chrome_trace, write_chrome_trace)
+from .metrics import MetricsRegistry, metrics
+from .trace import TRACE_VERSION, TraceRecorder, recorder
+
+__all__ = [
+    "DeviceTiming",
+    "MetricsRegistry",
+    "TRACE_VERSION",
+    "TraceRecorder",
+    "device_timing_available",
+    "load_events",
+    "metrics",
+    "profile_sample",
+    "recorder",
+    "to_chrome_trace",
+    "trial_summaries",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,146 @@
+"""Optional on-device timing via ``jax.profiler.trace``.
+
+Host clock brackets (what the samplers measure) include dispatch
+latency, transfer waits and scheduler jitter on top of the kernel's
+device-side busy time.  :func:`profile_sample` runs one invocation
+inside a profiler window, parses the ``perfetto_trace.json.gz`` the
+profiler writes, sums the duration of complete events on device-side
+tracks, and reports the host-vs-device skew — the first direct
+measurement of what the host brackets miss.
+
+Caveats, all by design:
+
+- a profiled invocation is *slower* than an unprofiled one (the trace
+  collector adds overhead), so the evaluator only profiles one extra
+  sample per incumbent-candidate trial, never the measured samples;
+- on CPU backends XLA usually emits no device tracks, so the parse
+  finds nothing and the function returns ``None`` — callers degrade to
+  host timing (off-GPU/TPU graceful degradation);
+- overlapping device events (multi-stream) are summed, not unioned, so
+  the busy time is an upper bound on wall occupancy.
+
+Every failure path — jax missing, profiler unavailable, no trace file,
+unparseable JSON, no device track — returns ``None`` rather than
+raising.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+__all__ = ["DeviceTiming", "device_timing_available", "profile_sample"]
+
+# substrings that mark a profiler process/track as device-side; host
+# tracks are named after python threads or "/host:CPU"
+_DEVICE_MARKERS = ("/device:gpu", "/device:tpu", "gpu:", "tpu:", "stream")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTiming:
+    """One profiled invocation: device busy time vs the host bracket."""
+
+    device_time_s: float
+    host_time_s: float
+    skew_s: float  # host bracket minus device busy time
+    n_events: int
+    source: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def device_timing_available() -> bool:
+    """True when jax's profiler is importable (not whether a device
+    track will actually appear — that depends on the backend)."""
+    try:
+        import jax
+
+        return hasattr(jax, "profiler") and hasattr(jax.profiler, "trace")
+    except Exception:
+        return False
+
+
+def _looks_device(track_name: str) -> bool:
+    name = track_name.lower()
+    return any(marker in name for marker in _DEVICE_MARKERS)
+
+
+def _parse_device_time(root: Path) -> Optional[tuple[float, int, str]]:
+    candidates = sorted(root.rglob("perfetto_trace.json.gz"))
+    if not candidates:
+        return None
+    source = candidates[-1]
+    try:
+        with gzip.open(source, "rt", encoding="utf-8", errors="replace") as fh:
+            doc = json.load(fh)
+    except Exception:
+        return None
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return None
+    device_pids = {
+        ev.get("pid")
+        for ev in events
+        if isinstance(ev, dict) and ev.get("ph") == "M"
+        and ev.get("name") == "process_name"
+        and _looks_device(str((ev.get("args") or {}).get("name", "")))
+    }
+    if not device_pids:
+        return None
+    total_us = 0.0
+    n = 0
+    for ev in events:
+        if (isinstance(ev, dict) and ev.get("ph") == "X"
+                and ev.get("pid") in device_pids):
+            total_us += float(ev.get("dur", 0.0))
+            n += 1
+    if n == 0:
+        return None
+    return total_us * 1e-6, n, str(source)
+
+
+def profile_sample(sample_fn: Callable[[], object],
+                   log_dir: Optional[str | Path] = None,
+                   ) -> Optional[DeviceTiming]:
+    """Run ``sample_fn`` once under the jax profiler; parse device time.
+
+    ``log_dir=None`` uses (and removes) a temporary directory; pass a
+    path to keep the raw profile for inspection.
+    """
+    try:
+        import jax
+    except Exception:
+        return None
+    tmp = None
+    try:
+        if log_dir is None:
+            tmp = tempfile.mkdtemp(prefix="repro-devprof-")
+            log_dir = tmp
+        t0 = time.perf_counter()
+        try:
+            with jax.profiler.trace(str(log_dir),
+                                    create_perfetto_trace=True):
+                out = sample_fn()
+                # drain async dispatch so the host bracket closes after
+                # the device work it is compared against (skew_s)
+                jax.block_until_ready(out)
+        except Exception:
+            return None
+        host_s = time.perf_counter() - t0
+        parsed = _parse_device_time(Path(log_dir))
+        if parsed is None:
+            return None
+        device_s, n, source = parsed
+        return DeviceTiming(device_time_s=device_s, host_time_s=host_s,
+                            skew_s=host_s - device_s, n_events=n,
+                            source=source)
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)

@@ -28,6 +28,7 @@ campaign's cache.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from pathlib import Path
@@ -35,6 +36,7 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.cache import AUTO_LEDGER, TrialCache, TuningSession
 from repro.core.evaluator import EvaluationSettings
+from repro.core.profiling import trace_span
 from repro.core.searchspace import Config, SearchSpace
 from repro.core.tuner import TrialRecord, Tuner, TuningResult
 
@@ -69,6 +71,7 @@ class CampaignResult:
     name: str
     base: str
     outcomes: tuple[ShapeOutcome, ...]
+    trace_path: Optional[str] = None   # campaign trace JSONL, when traced
 
     @property
     def total_trials(self) -> int:
@@ -210,32 +213,69 @@ class SweepCampaign:
     def run(self, shapes: Optional[Sequence[Config]] = None,
             holdout: Sequence[Config] = (), backend=None,
             timestamp: Optional[float] = None,
-            progress=None) -> CampaignResult:
+            progress=None,
+            trace: "bool | str | os.PathLike" = False) -> CampaignResult:
         """Tune every shape (grid order), skipping ``holdout`` shapes —
         the oracle-evaluation protocol tunes the grid minus one shape and
         asks the oracle about the one it never saw. ``backend``,
         ``timestamp`` and ``progress`` are forwarded to each session's
         ``run``; priors are re-collected from the shared cache before
         each shape, so shape *i* benefits from shapes 0..i-1 (and from
-        any earlier campaign run into the same cache)."""
+        any earlier campaign run into the same cache).
+
+        ``trace`` records the whole campaign into one span trace
+        (``True`` → ``<cache_dir>/<name>.trace.jsonl``, or pass a path):
+        a ``campaign`` root span with one ``shape`` span per tuned shape,
+        each enclosing that shape's session/trial spans. If a recorder is
+        already installed (an enclosing harness), it is reused and the
+        flag only adds the campaign/shape spans."""
         held = {shape_key(s) for s in holdout}
         todo = [s for s in (shapes if shapes is not None
                             else self.shape_space.ordered("exhaustive"))
                 if shape_key(s) not in held]
         outcomes: list[ShapeOutcome] = []
-        for j, shape in enumerate(todo):
-            bench = shape_benchmark_name(self.base, shape)
-            result = self._finished_result(bench, self._cache())
-            if result is None:
-                session = self.session_for(shape, priors=self.priors(
-                    exclude=shape), seed_offset=j)
-                result = session.run(backend=backend, timestamp=timestamp,
-                                     progress=progress,
-                                     validate=self.validate)
-            outcomes.append(ShapeOutcome(shape=dict(shape),
-                                         benchmark=bench, result=result))
+        trace_path: Optional[str] = None
+        with contextlib.ExitStack() as stack:
+            from repro.obs.trace import TraceRecorder, recorder
+            if trace and recorder() is None:
+                path = (self.cache_dir / f"{self.name}.trace.jsonl"
+                        if trace is True else Path(trace))
+                stack.enter_context(
+                    TraceRecorder(path, session=self.name,
+                                  meta={"campaign": self.name,
+                                        "base": self.base}))
+            active = recorder()
+            if active is not None and getattr(active, "path", None):
+                trace_path = str(active.path)
+            with trace_span("campaign", cat="session", context=True,
+                            campaign=self.name, base=self.base,
+                            n_shapes=len(todo)) as cspan:
+                for j, shape in enumerate(todo):
+                    bench = shape_benchmark_name(self.base, shape)
+                    result = self._finished_result(bench, self._cache())
+                    with trace_span("shape", cat="shape", context=True,
+                                    shape=dict(shape),
+                                    benchmark=bench) as sspan:
+                        if result is None:
+                            session = self.session_for(
+                                shape, priors=self.priors(exclude=shape),
+                                seed_offset=j)
+                            result = session.run(backend=backend,
+                                                 timestamp=timestamp,
+                                                 progress=progress,
+                                                 validate=self.validate)
+                        else:
+                            sspan.set(served_from_cache=True)
+                        sspan.set(n_trials=len(result.trials),
+                                  best_score=result.best_score)
+                    outcomes.append(ShapeOutcome(shape=dict(shape),
+                                                 benchmark=bench,
+                                                 result=result))
+                cspan.set(total_trials=sum(len(o.result.trials)
+                                           for o in outcomes))
         return CampaignResult(name=self.name, base=self.base,
-                              outcomes=tuple(outcomes))
+                              outcomes=tuple(outcomes),
+                              trace_path=trace_path)
 
     def oracle(self, model: Optional[str] = None,
                min_shapes: int = 2) -> ConfigOracle:
