@@ -371,6 +371,99 @@ def sweep_chunk_space(k_max: int = 512) -> SearchSpace:
     return grid(k_chunk=powers_of_two(16, k_max))
 
 
+# ---------------------------------------------------------------------------
+# Whole-model workloads as tuning objectives (ROADMAP: models ∩ tuner)
+# ---------------------------------------------------------------------------
+#
+# A model step is a benchmark like any other: the config carries the
+# StepConfig execution knobs (Pallas flash-attention tiles, remat), the
+# score is GFLOP/s over the step's *compiler-reported* work — the same
+# helper the audit checks, so the declared-vs-traced lint (MS101) pins
+# the conversion constant instead of trusting an analytic 6ND estimate
+# that drifts on tiny configs.
+
+
+def model_step_space(quick: bool = True) -> SearchSpace:
+    """Execution-knob space of a whole-model step. ``use_flash`` gates
+    the Pallas path (interpret mode on CPU), the tiles only bind when it
+    is on — kept in one grid so the tuner sees the interaction."""
+    if quick:
+        return grid(use_flash=(0, 1), flash_block_q=(64, 128),
+                    flash_block_k=(64, 128))
+    return grid(use_flash=(0, 1), flash_block_q=(64, 128, 256, 512),
+                flash_block_k=(64, 128, 256, 512), remat=(0, 1))
+
+
+def _model_step(workload: str, arch, cfg: dict, *,
+                batch_size: int, seq_len: int):
+    """Build one workload under a tuner config (shared by the timed
+    factory, the audit spec, and the precompile hook)."""
+    from repro.models.transformer import StepConfig
+    from repro.models.workloads import build_workload
+
+    step = StepConfig(
+        use_flash=bool(cfg.get("use_flash", 0)),
+        flash_block_q=int(cfg.get("flash_block_q", 512)),
+        flash_block_k=int(cfg.get("flash_block_k", 512)),
+        remat=bool(cfg.get("remat", 0)))
+    return build_workload(workload, arch, step=step,
+                          batch_size=batch_size, seq_len=seq_len)
+
+
+def model_step_family(workload: str, arch: str | None = None, *,
+                      batch_size: int = 2, seq_len: int = 64) -> Callable:
+    """Benchmark family for one whole-model step (train/prefill/decode).
+
+    ``workload`` names a :mod:`repro.models.workloads` builder; ``arch``
+    picks a smoke-scale architecture (default: the tiny dense toy). The
+    returned ``bench(cfg)`` exposes ``audit_spec`` and ``precompile``
+    like the microbenchmarks, so model steps ride the same lint, AOT
+    cache, and pipelined-compile machinery.
+    """
+    from repro.models.workloads import workload_static_cost
+
+    def bench(cfg: dict) -> Callable:
+        w = _model_step(workload, arch, cfg,
+                        batch_size=batch_size, seq_len=seq_len)
+        flops = workload_static_cost(w).flops
+        state: dict = {"compiled": None}
+
+        def factory():
+            if state["compiled"] is None:
+                state["compiled"] = w.compiled()
+            f = state["compiled"]
+            jax.block_until_ready(f(*w.args))   # pre-heat
+            trace_instant("workload", kernel=workload,
+                          arch=arch or "tiny-dense", flops=flops,
+                          **{k: cfg[k] for k in sorted(cfg)})
+
+            def run():
+                jax.block_until_ready(f(*w.args))
+
+            return timed_sampler(run, work=flops / 1e9)  # GFLOP/s
+
+        return factory
+
+    def model_audit_spec(cfg: dict) -> WorkloadSpec:
+        w = _model_step(workload, arch, cfg,
+                        batch_size=batch_size, seq_len=seq_len)
+        return WorkloadSpec(
+            fn=w.fn, args=w.args,
+            work=workload_static_cost(w).flops, unit="flops",
+            name=f"{workload}[{arch or 'tiny-dense'}"
+                 f" b{batch_size} s{seq_len}]")
+
+    def model_precompile(cfg: dict) -> None:
+        w = _model_step(workload, arch, cfg,
+                        batch_size=batch_size, seq_len=seq_len)
+        w.compiled()
+
+    bench.audit_spec = model_audit_spec
+    bench.precompile = model_precompile
+    bench.__name__ = f"model_step_{workload}"
+    return bench
+
+
 # -- workload audit declarations (repro.lint pass 1) ------------------------
 
 def dgemm_audit_spec(cfg: dict) -> WorkloadSpec:
@@ -408,4 +501,13 @@ AUDITED_WORKLOADS: dict[str, tuple[Callable, dict]] = {
     # chunked kernel and must see exactly the 2mnk flops it declares
     "dgemm_sweep": (chunked_dgemm_family({"m": 256, "n": 256, "k": 256}),
                     {"k_chunk": 64}),
+    # whole-model steps: work terms come from the compiler's own cost
+    # analysis (shared helper), so the audit is a determinism check on
+    # the GFLOP/s conversion rather than an analytic approximation
+    "train_step": (model_step_family("train_step"),
+                   {"use_flash": 0, "flash_block_q": 64,
+                    "flash_block_k": 64}),
+    "decode_step": (model_step_family("decode_step"),
+                    {"use_flash": 0, "flash_block_q": 64,
+                     "flash_block_k": 64}),
 }

@@ -89,4 +89,30 @@ if problems:
 print(f"trace ok: {len(events)} events, {len(trials)} trial spans")
 EOF
 
+echo "== tiny-model attribution smoke =="
+# blocking: the static (HLO-only) attribution path must label every op
+# of a tiny train step with a subsystem and a %-of-roof, and report the
+# remainder as exactly zero (see docs/attribution.md)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from repro.core.roofline import TPU_V5E
+from repro.models.workloads import build_workload
+from repro.obs.attribution import Roofs, attribute
+
+roofs = Roofs(peak_flops=TPU_V5E.peak_flops,
+              bandwidths=dict(TPU_V5E.mem_bandwidths),
+              fingerprint=f"{TPU_V5E.name} (theoretical)")
+report = attribute(build_workload("train_step"), roofs, force_static=True)
+if not report.ops:
+    raise SystemExit("attribution produced no ops")
+bad = [op.name for op in report.ops
+       if not op.subsystem or op.pct_of_roof is None]
+if bad:
+    raise SystemExit(f"unlabeled ops in static attribution: {bad[:5]}")
+if report.unattributed_s != 0.0:
+    raise SystemExit(
+        f"static remainder must be 0, got {report.unattributed_s}")
+print(f"attribution ok: {len(report.ops)} ops labeled, "
+      f"{report.total_flops:.3g} FLOPs, remainder 0")
+EOF
+
 echo "== ci.sh: all green =="

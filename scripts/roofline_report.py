@@ -21,6 +21,15 @@ per-series trend lines with CI bands and the regression verdicts from the
 performance-history ledger (see ``docs/history.md``); with ``--trace
 TRACE`` it embeds a per-trial drill-down table from a session trace
 (``scripts/tune.py --trace``, see ``docs/observability.md``).
+
+``--attribute WORKLOAD`` profiles a whole-model workload (train_step /
+prefill_step / decode_step / dgemm over a small ModelConfig), joins each
+HLO op's cost with its measured device time when the profiler yields
+device tracks (static HLO-only attribution otherwise), classifies every
+op against the empirical roofs recovered from the given caches, and adds
+a per-op attribution section to the markdown and HTML dashboards (see
+``docs/attribution.md``). Cache paths become optional in this mode; with
+no usable cache the theoretical TPU-v5e roofs stand in (clearly marked).
 """
 
 from __future__ import annotations
@@ -43,8 +52,9 @@ def main() -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("paths", nargs="+",
-                    help="cache files or directories of *.jsonl caches")
+    ap.add_argument("paths", nargs="*",
+                    help="cache files or directories of *.jsonl caches "
+                         "(optional with --attribute)")
     ap.add_argument("--dgemm-benchmark", default=DGEMM_BENCHMARK,
                     help="benchmark name supplying the compute peak")
     ap.add_argument("--triad-benchmark", default=TRIAD_BENCHMARK,
@@ -64,7 +74,27 @@ def main() -> int:
                     help="session trace JSONL (scripts/tune.py --trace) to "
                          "embed a per-trial drill-down table into the "
                          "--html dashboard")
+    ap.add_argument("--max-trial-rows", type=int, default=200,
+                    metavar="N",
+                    help="row cap of the --trace drill-down table "
+                         "(default 200)")
+    ap.add_argument("--attribute", default=None, metavar="WORKLOAD",
+                    help="attribute one workload's HLO ops against the "
+                         "empirical roofs (train_step | prefill_step | "
+                         "decode_step | dgemm)")
+    ap.add_argument("--arch", default=None, metavar="ARCH",
+                    help="smoke-scale model architecture for --attribute "
+                         "(default: tiny dense toy; see repro.configs)")
+    ap.add_argument("--static", action="store_true",
+                    help="force static HLO-only attribution (skip the "
+                         "profiled invocation)")
+    ap.add_argument("--attribution-json", default=None, metavar="PATH",
+                    help="write the --attribute report as JSON (CI "
+                         "artifact)")
     args = ap.parse_args()
+
+    if not args.paths and not args.attribute:
+        ap.error("at least one cache path is required (or --attribute)")
 
     trials = []
     for p in args.paths:
@@ -73,7 +103,7 @@ def main() -> int:
             print(f"error: no such cache: {p}", file=sys.stderr)
             return 2
         trials.extend(load_trials(path))
-    if not trials:
+    if not trials and not args.attribute:
         print("error: no readable trials in the given cache(s)",
               file=sys.stderr)
         return 1
@@ -89,18 +119,55 @@ def main() -> int:
               file=sys.stderr)
         for fp, reason in skipped:
             print(f"  {fp}: {reason}", file=sys.stderr)
-        if not (args.html and args.history):
+        if not (args.html and args.history) and not args.attribute:
             print("error: nothing to render", file=sys.stderr)
             return 1
+
+    attribution = None
+    if args.attribute:
+        from repro.core.roofline import TPU_V5E  # noqa: E402
+        from repro.models.workloads import build_workload  # noqa: E402
+        from repro.obs.attribution import Roofs, attribute  # noqa: E402
+        from repro.obs.attribution import roofs_from_trials  # noqa: E402
+
+        roofs = roofs_from_trials(args.paths) if args.paths else None
+        if roofs is None:
+            # no empirical roofs in the caches: classify against the
+            # shipped theoretical machine description, clearly marked
+            roofs = Roofs(peak_flops=TPU_V5E.peak_flops,
+                          bandwidths=dict(TPU_V5E.mem_bandwidths),
+                          fingerprint=f"{TPU_V5E.name} (theoretical)")
+            print(f"note: no empirical roofs recovered; classifying "
+                  f"against {TPU_V5E.name} theoretical peaks",
+                  file=sys.stderr)
+        try:
+            workload = build_workload(args.attribute, args.arch)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        attribution = attribute(workload, roofs, force_static=args.static)
+        print(f"attributed {len(attribution.ops)} ops of "
+              f"{args.attribute} ({attribution.mode} mode, "
+              f"unattributed {attribution.unattributed_frac * 100:.1f}%)",
+              file=sys.stderr)
+        if args.attribution_json:
+            import json
+
+            pathlib.Path(args.attribution_json).write_text(
+                json.dumps(attribution.to_json(), indent=2),
+                encoding="utf-8")
+            print(f"wrote {args.attribution_json}")
 
     # in the ledger-only continue-path reports is empty: --out/--csv still
     # write (a header-only dashboard/CSV), never silently skip a requested
     # artifact while exiting 0
     markdown = render_markdown(reports, skipped)
+    if attribution is not None:
+        markdown = markdown + "\n" + attribution.to_markdown()
     if args.out:
         pathlib.Path(args.out).write_text(markdown, encoding="utf-8")
         print(f"wrote {args.out}")
-    elif reports:
+    elif reports or attribution is not None:
         sys.stdout.write(markdown)
     if args.csv:
         pathlib.Path(args.csv).write_text(render_csv(reports),
@@ -133,7 +200,9 @@ def main() -> int:
                         title="Roofline & performance history",
                         subtitle=f"generated {stamp} from "
                                  f"{len(trials)} cached trials",
-                        confidence=args.confidence, trials=trial_rows)
+                        confidence=args.confidence, trials=trial_rows,
+                        attribution=attribution,
+                        max_trial_rows=args.max_trial_rows)
         print(f"wrote {args.html}")
     return 0
 

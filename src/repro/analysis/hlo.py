@@ -32,6 +32,10 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
+    # fp8 family (one byte each) — a quantized op must not land in the
+    # unhandled tally and silently undercount traffic
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
 }
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -128,6 +132,10 @@ _SKIP_OPS = frozenset({
     "custom-call", "while", "conditional", "domain", "opt-barrier",
 }) | set(_COLLECTIVES)
 
+# reductions: one FLOP per *input* element folded into the result
+# (reduce of N elements to M results performs ~N combiner applications)
+_REDUCE_OPS = frozenset({"reduce", "reduce-window"})
+
 # generic "name = shape op(" — the op token is the word before the operand
 # list; versioned names (%add.0) carry the version after the paren match
 _COST_OP_RE = re.compile(
@@ -192,9 +200,38 @@ class HloCost:
                    if self.unhandled else ""))
 
 
+def _op_cost(op: str, shape: str, operands: str,
+             line: str) -> "tuple[float, float] | None":
+    """(flops, bytes) of one costed instruction, ``None`` when the op kind
+    is not modeled. Shared by the module-aggregate and per-op parsers so
+    the two views can never disagree on a single instruction."""
+    moved = _shape_bytes(shape) + _shape_bytes(operands)
+    if op == "dot":
+        lhs = _SHAPE_RE.search(operands)
+        contract = 1
+        cm = _CONTRACT_RE.search(line)
+        if lhs is not None and cm is not None and cm.group(1):
+            dims = [int(d) for d in lhs.group("dims").split(",")] \
+                if lhs.group("dims") else []
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if 0 <= i < len(dims):
+                    contract *= dims[i]
+        return 2.0 * _shape_numel(shape) * contract, float(moved)
+    if op in _ELEMENTWISE_OPS:
+        return float(_shape_numel(shape)), float(moved)
+    if op in _REDUCE_OPS:
+        # one combiner application per input element (init scalars are
+        # part of the operand list; their O(1) contribution is noise)
+        return float(_shape_numel(operands)), float(moved)
+    if op in _COPY_OPS:
+        return 0.0, float(moved)
+    return None
+
+
 def parse_hlo_cost(hlo_text: str) -> HloCost:
-    """Extract FLOP/byte costs for dot / elementwise / copy ops from HLO
-    text (compiled ``.as_text()`` or handwritten fixtures).
+    """Extract FLOP/byte costs for dot / elementwise / reduce / copy ops
+    from HLO text (compiled ``.as_text()`` or handwritten fixtures).
 
     Fusion *bodies* are separate named computations in the same text, so
     counting every line once costs fused ops exactly once; the calling
@@ -212,32 +249,174 @@ def parse_hlo_cost(hlo_text: str) -> HloCost:
         if op in _SKIP_OPS or op.endswith("-start") or op.endswith("-done"):
             continue
         operands = _operand_text(line, m.end() - 1)
-        moved = _shape_bytes(shape) + _shape_bytes(operands)
-        if op == "dot":
-            lhs = _SHAPE_RE.search(operands)
-            contract = 1
-            cm = _CONTRACT_RE.search(line)
-            if lhs is not None and cm is not None and cm.group(1):
-                dims = [int(d) for d in lhs.group("dims").split(",")] \
-                    if lhs.group("dims") else []
-                for idx in cm.group(1).split(","):
-                    i = int(idx)
-                    if 0 <= i < len(dims):
-                        contract *= dims[i]
-            flops_by_op[op] += 2.0 * _shape_numel(shape) * contract
-            bytes_by_op[op] += moved
-        elif op in _ELEMENTWISE_OPS:
-            flops_by_op[op] += float(_shape_numel(shape))
-            bytes_by_op[op] += moved
-        elif op in _COPY_OPS:
-            bytes_by_op[op] += moved
-        else:
+        cost = _op_cost(op, shape, operands, line)
+        if cost is None:
             unhandled[op] += 1
+            continue
+        flops, moved = cost
+        if flops:
+            flops_by_op[op] += flops
+        bytes_by_op[op] += moved
     return HloCost(flops=sum(flops_by_op.values()),
                    bytes_accessed=sum(bytes_by_op.values()),
                    flops_by_op=dict(flops_by_op),
                    bytes_by_op=dict(bytes_by_op),
                    unhandled=dict(unhandled))
+
+
+# ---------------------------------------------------------------------------
+# Per-op records (roofline attribution, repro.obs.attribution)
+# ---------------------------------------------------------------------------
+
+#: structural entry-computation ops that never appear on a device timeline
+_STRUCTURAL_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "domain", "opt-barrier", "partition-id", "replica-id",
+})
+
+#: caller ops whose cost is their called computation's total
+_CALLER_OPS = frozenset({"fusion", "call"})
+
+# computation header, column 0:  "%fused_computation.1 (p: f32[4]) -> ... {"
+# or "ENTRY %main.5 (...) -> ... {"  (handwritten fixtures may omit "%")
+_COMP_RE = re.compile(
+    r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w.$-]+)\s*\(")
+
+_INSTR_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.$-]+)\s*=")
+
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?(?P<callee>[\w.$-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """One entry-computation instruction with its text-derived cost.
+
+    ``kind`` is the HLO opcode (fusions keep ``fusion``; their cost is
+    the called computation's total). ``modeled`` is False for op kinds
+    the cost model does not cover — the record still exists (so measured
+    device time can be joined against it) but carries zero cost.
+    """
+
+    name: str                    # instruction name, "%" stripped
+    kind: str
+    flops: float
+    bytes_accessed: float
+    modeled: bool = True
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity I = FLOPs / bytes of this op (paper
+        Eq. 1). Zero-traffic compute is ``inf``; zero-work movement 0."""
+        if self.bytes_accessed <= 0:
+            return float("inf") if self.flops > 0 else 0.0
+        return self.flops / self.bytes_accessed
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleOps:
+    """Per-op cost records of one HLO module's entry computation."""
+
+    ops: tuple[OpCost, ...]
+    unhandled: dict[str, int]    # op kinds seen but not cost-modeled
+
+    @property
+    def flops(self) -> float:
+        return sum(o.flops for o in self.ops)
+
+    @property
+    def bytes_accessed(self) -> float:
+        return sum(o.bytes_accessed for o in self.ops)
+
+    def by_name(self) -> dict[str, OpCost]:
+        return {o.name: o for o in self.ops}
+
+
+def parse_hlo_ops(hlo_text: str) -> ModuleOps:
+    """Per-instruction cost records of the ENTRY computation.
+
+    Unlike :func:`parse_hlo_cost` (which flattens every computation into
+    module totals), this keeps one record per *entry* instruction — the
+    granularity a device timeline reports — and rolls each ``fusion`` /
+    ``call`` instruction's cost up from its called computation, so a
+    fused elementwise chain is attributed to the one op Perfetto will
+    show. ``while``/``conditional`` bodies are counted once (trip counts
+    are not in the text); they land in ``unhandled`` to flag the
+    estimate as partial.
+    """
+    # pass 1: bucket instruction lines per computation
+    comps: dict[str, list[tuple[str, str, str, str, str]]] = {}
+    entry: "str | None" = None
+    current = ""
+    for line in hlo_text.splitlines():
+        if not line.startswith((" ", "\t")):
+            cm = _COMP_RE.match(line)
+            if cm and line.rstrip().endswith("{") \
+                    and ("->" in line or cm.group("entry")):
+                current = cm.group("name")
+                comps.setdefault(current, [])
+                if cm.group("entry"):
+                    entry = current
+                continue
+        m = _COST_OP_RE.search(line)
+        if m is None:
+            continue
+        nm = _INSTR_NAME_RE.match(line)
+        name = nm.group("name") if nm else m.group("op")
+        operands = _operand_text(line, m.end() - 1)
+        comps.setdefault(current, []).append(
+            (name, m.group("op"), m.group("shape"), operands, line))
+    if entry is None:
+        # handwritten fixtures without an ENTRY header: the implicit
+        # top-level bucket (or the only computation present)
+        entry = "" if comps.get("") else next(iter(comps), "")
+
+    unhandled: dict[str, int] = defaultdict(int)
+
+    def comp_cost(comp: str, seen: frozenset) -> tuple[float, float]:
+        """Summed (flops, bytes) of one computation, callees resolved."""
+        if comp in seen:  # pragma: no cover - malformed recursive module
+            return 0.0, 0.0
+        total_f = total_b = 0.0
+        for name, op, shape, operands, line in comps.get(comp, ()):
+            f, b, _ = record_cost(op, shape, operands, line, seen | {comp})
+            total_f += f
+            total_b += b
+        return total_f, total_b
+
+    def record_cost(op: str, shape: str, operands: str, line: str,
+                    seen: frozenset) -> tuple[float, float, bool]:
+        """(flops, bytes, modeled) of one instruction."""
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done") or base in _STRUCTURAL_OPS:
+            return 0.0, 0.0, True
+        if base in _CALLER_OPS or base in ("while", "conditional"):
+            cm = _CALLS_RE.search(line)
+            if base in ("while", "conditional"):
+                unhandled[base] += 1   # body counted once, trips unknown
+                cm = re.search(r"body=%?(?P<callee>[\w.$-]+)", line) or cm
+            if cm is not None:
+                f, b = comp_cost(cm.group("callee"), seen)
+                return f, b, True
+            return 0.0, 0.0, False
+        if base in _COLLECTIVES:
+            # traffic only; link bytes are parse_collectives' business
+            return (0.0, float(_shape_bytes(shape) + _shape_bytes(operands)),
+                    True)
+        cost = _op_cost(base, shape, operands, line)
+        if cost is None:
+            unhandled[base] += 1
+            return 0.0, 0.0, False
+        return cost[0], cost[1], True
+
+    ops: list[OpCost] = []
+    for name, op, shape, operands, line in comps.get(entry, ()):
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done") or base in _STRUCTURAL_OPS:
+            continue
+        f, b, modeled = record_cost(op, shape, operands, line, frozenset())
+        ops.append(OpCost(name=name, kind=base, flops=f, bytes_accessed=b,
+                          modeled=modeled))
+    return ModuleOps(ops=tuple(ops), unhandled=dict(unhandled))
 
 
 def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:

@@ -316,8 +316,85 @@ def _verdict_section(report: RegressionReport) -> str:
     ])
 
 
-#: drill-down row cap — campaigns can trace thousands of trials; the
-#: dashboard shows the first N and says how many it dropped
+#: per-op rows shown in the attribution table before eliding
+_MAX_ATTRIBUTION_ROWS = 30
+
+
+def _stacked_bar_svg(shares: Sequence[tuple[str, float]],
+                     width: int = 560, height: int = 72) -> str:
+    """One horizontal stacked bar of (label, seconds) shares with an
+    inline legend — the where-does-the-time-go view of an attribution."""
+    total = sum(max(s, 0.0) for _, s in shares)
+    bar_h, pad = 26, 4
+    body = []
+    x = 0.0
+    for k, (label, secs) in enumerate(shares):
+        frac = (max(secs, 0.0) / total) if total > 0 else 0.0
+        w = frac * width
+        color = _CURVE_COLORS[k % len(_CURVE_COLORS)]
+        if label == "unattributed":
+            color = "#9498a0"
+        if w > 0:
+            body.append(
+                f'<rect class="attr-bar" x="{_fmt(x)}" y="{pad}" '
+                f'width="{_fmt(w)}" height="{bar_h}" fill="{color}">'
+                f'<title>{_esc(label)}: {secs * 1e6:.3g}µs '
+                f'({frac * 100:.1f}%)</title></rect>')
+        x += w
+    legend = "".join(
+        f'<text x="{8 + 170 * k}" y="{pad + bar_h + 18}" '
+        f'fill="{"#9498a0" if label == "unattributed" else _CURVE_COLORS[k % len(_CURVE_COLORS)]}">'
+        f'{_esc(label)} {100.0 * max(secs, 0.0) / total if total else 0.0:.1f}%</text>'
+        for k, (label, secs) in enumerate(shares))
+    return (f'<svg viewBox="0 0 {width} {height}" width="{width}" '
+            f'height="{height}" role="img">{"".join(body)}{legend}</svg>')
+
+
+def _attribution_section(report) -> str:
+    """Per-op roofline placement of one workload: cost/time table plus a
+    stacked subsystem-share bar. ``report`` is an
+    :class:`~repro.obs.attribution.AttributionReport`."""
+    rows = []
+    for op in report.top_ops(_MAX_ATTRIBUTION_ROWS):
+        intensity = ("∞" if math.isinf(op.intensity)
+                     else f"{op.intensity:.3g}")
+        rows.append([
+            f"<code>{_esc(op.name)}</code>", _esc(op.kind),
+            f"{op.flops:.4g}", f"{op.bytes_accessed:.4g}", intensity,
+            ("—" if op.time_s is None else f"{op.time_s * 1e6:.3g}"),
+            _esc(op.subsystem), _esc(op.bound),
+            ("—" if op.pct_of_roof is None else f"{op.pct_of_roof:.1f}%")])
+    elided = len(report.ops) - min(len(report.ops), _MAX_ATTRIBUTION_ROWS)
+    shares = sorted(report.subsystem_seconds.items())
+    shares.append(("unattributed", report.unattributed_s))
+    if report.mode == "measured":
+        basis = (f"device total {report.device_total_s * 1e6:.3g}µs, "
+                 f"unattributed {report.unattributed_frac * 100:.1f}%")
+    else:
+        basis = ("static HLO attribution (no device tracks): op time is "
+                 "the roofline lower bound, remainder exactly 0")
+    roofs = report.roofs
+    roof_txt = ("no roofs recovered — ops unclassified" if roofs is None
+                else f"F_p={roofs.peak_flops:.4g} FLOP/s vs "
+                     + ", ".join(f"{k}={v:.4g} B/s"
+                                 for k, v in sorted(roofs.bandwidths.items())))
+    return "\n".join([
+        f"<h2>Attribution — <code>{_esc(report.workload)}</code> "
+        f"({_esc(report.mode)})</h2>",
+        f"<p class=\"meta\">{len(report.ops)} HLO ops, "
+        f"{report.total_flops:.4g} FLOPs, {report.total_bytes:.4g} bytes; "
+        f"{_esc(basis)}. Roofs: {_esc(roof_txt)}.</p>",
+        _stacked_bar_svg(shares),
+        _table(["op", "kind", "FLOPs", "bytes", "I (FLOP/B)", "time µs",
+                "subsystem", "bound", "% of roof"], rows),
+        (f"<p class=\"meta\">{elided} further op(s) elided.</p>"
+         if elided else ""),
+    ])
+
+
+#: default drill-down row cap — campaigns can trace thousands of trials;
+#: the dashboard shows the first N and says how many it dropped
+#: (``roofline_report.py --max-trial-rows`` overrides per render)
 _MAX_TRIAL_ROWS = 200
 
 
@@ -333,9 +410,10 @@ def _flags(row: dict) -> str:
     return " ".join(out) or "—"
 
 
-def _trials_section(trials: Sequence[dict]) -> str:
+def _trials_section(trials: Sequence[dict],
+                    max_rows: int = _MAX_TRIAL_ROWS) -> str:
     """Per-trial drill-down from a trace's ``trial_summaries`` rows."""
-    shown = list(trials)[:_MAX_TRIAL_ROWS]
+    shown = list(trials)[:max(max_rows, 0)]
     rows = []
     for r in shown:
         phases = ", ".join(f"{_esc(k)} {v * 1e3:.2f}ms"
@@ -367,22 +445,28 @@ def render_html(reports: Sequence = (), skipped: Sequence[tuple[str, str]] = (),
                 title: str = "Performance history dashboard",
                 subtitle: Optional[str] = None,
                 confidence: float = 0.99,
-                trials: Sequence[dict] = ()) -> str:
+                trials: Sequence[dict] = (),
+                attribution=None,
+                max_trial_rows: int = _MAX_TRIAL_ROWS) -> str:
     """Assemble the self-contained dashboard.
 
     Every argument is optional: a cache-only call renders roofline
     summaries, a ledger-only call renders trends (and verdicts when a
     ``regression`` report is supplied). ``trials`` is a sequence of
     ``repro.obs.export.trial_summaries`` rows rendered as a per-trial
-    drill-down table. ``subtitle`` is caller-supplied display text
-    (e.g. a generation timestamp) — this function itself never reads a
-    clock, so output is deterministic for golden tests.
+    drill-down table, capped at ``max_trial_rows``. ``attribution`` is
+    an :class:`~repro.obs.attribution.AttributionReport` rendered as a
+    per-op roofline placement section. ``subtitle`` is caller-supplied
+    display text (e.g. a generation timestamp) — this function itself
+    never reads a clock, so output is deterministic for golden tests.
     """
     sections: list[str] = []
     if regression is not None:
         sections.append(_verdict_section(regression))
     for report in reports:
         sections.append(_roofline_section(report))
+    if attribution is not None:
+        sections.append(_attribution_section(attribution))
     if ledger is not None:
         for benchmark, fingerprint in ledger.keys():
             runs = ledger.series(benchmark, fingerprint)
@@ -390,7 +474,7 @@ def render_html(reports: Sequence = (), skipped: Sequence[tuple[str, str]] = (),
                 sections.append(_trend_section(benchmark, fingerprint, runs,
                                                confidence))
     if trials:
-        sections.append(_trials_section(list(trials)))
+        sections.append(_trials_section(list(trials), max_trial_rows))
     if skipped:
         items = "".join(f"<li><code>{_esc(fp)}</code>: {_esc(reason)}</li>"
                         for fp, reason in skipped)
@@ -413,7 +497,9 @@ def write_dashboard(path, reports: Sequence = (),
                     title: str = "Performance history dashboard",
                     subtitle: Optional[str] = None,
                     confidence: float = 0.99,
-                    trials: Sequence[dict] = ()) -> Path:
+                    trials: Sequence[dict] = (),
+                    attribution=None,
+                    max_trial_rows: int = _MAX_TRIAL_ROWS) -> Path:
     """The CLI recipe shared by ``roofline_report.py --html`` and
     ``benchmarks/run.py --html``: detect regressions over the ledger
     (when one is given), render, write. Returns the written path."""
@@ -422,7 +508,8 @@ def write_dashboard(path, reports: Sequence = (),
     html = render_html(reports, skipped, ledger=ledger,
                        regression=regression, title=title,
                        subtitle=subtitle, confidence=confidence,
-                       trials=trials)
+                       trials=trials, attribution=attribution,
+                       max_trial_rows=max_trial_rows)
     out = Path(path)
     out.write_text(html, encoding="utf-8")
     return out

@@ -11,6 +11,23 @@ from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
 
 
+def _pallas_forward(q, k, v, *, sm_scale, causal, window, bq, bk,
+                    interpret):
+    b, h, s, d = q.shape
+    bq_ = min(bq, s) if s >= 128 else s
+    bk_ = min(bk, s) if s >= 128 else s
+    pad = (-s) % max(bq_, bk_)
+    if pad:
+        cfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, cfg)
+        k = jnp.pad(k, cfg)
+        v = jnp.pad(v, cfg)
+    out = flash_attention_pallas(q, k, v, sm_scale=sm_scale, causal=causal,
+                                 window=window, bq=bq_, bk=bk_,
+                                 interpret=interpret)
+    return out[:, :, :s, :]
+
+
 @functools.partial(jax.jit, static_argnames=("sm_scale", "causal", "window",
                                              "bq", "bk", "use_pallas",
                                              "interpret"))
@@ -25,20 +42,33 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     rows can only attend forward of all real queries under the causal mask
     (pad positions are appended), so they never contribute. For non-causal
     use the reference path or pre-masked inputs.
+
+    Differentiable: ``pallas_call`` defines no autodiff rule, so the
+    kernel carries a custom VJP whose backward recomputes attention
+    through the reference path — same math, so gradients are exact for
+    the function computed; train steps can tune the forward tiles
+    (``bq``/``bk``) without losing ``jax.grad``.
     """
     if not use_pallas:
         return attention_ref(q, k, v, sm_scale=sm_scale, causal=causal,
                              window=window)
-    b, h, s, d = q.shape
-    bq_ = min(bq, s) if s >= 128 else s
-    bk_ = min(bk, s) if s >= 128 else s
-    pad = (-s) % max(bq_, bk_)
-    if pad:
-        cfg = ((0, 0), (0, 0), (0, pad), (0, 0))
-        q = jnp.pad(q, cfg)
-        k = jnp.pad(k, cfg)
-        v = jnp.pad(v, cfg)
-    out = flash_attention_pallas(q, k, v, sm_scale=sm_scale, causal=causal,
-                                 window=window, bq=bq_, bk=bk_,
-                                 interpret=interpret)
-    return out[:, :, :s, :]
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _pallas_forward(q, k, v, sm_scale=sm_scale, causal=causal,
+                               window=window, bq=bq, bk=bk,
+                               interpret=interpret)
+
+    def fa_fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def fa_bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: attention_ref(q_, k_, v_, sm_scale=sm_scale,
+                                             causal=causal, window=window),
+            q, k, v)
+        return vjp(g)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa(q, k, v)

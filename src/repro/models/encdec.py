@@ -76,7 +76,9 @@ def _dec_block(c: jax.Array, lp: dict, enc_out: jax.Array, cfg: ModelConfig,
         kv = (k, v)
     else:
         c = c + L.attention_full(lp["attn"], a_in, cfg, causal=True,
-                                 rope=False, use_flash=step.use_flash)
+                                 rope=False, use_flash=step.use_flash,
+                                 block_q=step.flash_block_q,
+                                 block_k=step.flash_block_k)
         kv = None
     x_in = L.apply_norm(lp["lnx"], c, cfg)
     c = c + L.attention_full(lp["xattn"], x_in, cfg, kv_x=enc_out,

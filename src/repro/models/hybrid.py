@@ -86,7 +86,9 @@ def _shared_block(h: jax.Array, sp: dict, cfg: ModelConfig, step: StepConfig,
         kv = (k, v)
     else:
         a = L.attention_full(sp["attn"], a_in, cfg, causal=True,
-                             window=cfg.window, use_flash=step.use_flash)
+                             window=cfg.window, use_flash=step.use_flash,
+                             block_q=step.flash_block_q,
+                             block_k=step.flash_block_k)
         kv = None
     h = h + a
     h = h + L.apply_mlp(sp["mlp"], L.apply_norm(sp["ln2"], h, cfg), cfg)

@@ -153,7 +153,8 @@ def _qkv(p: dict, x: jax.Array, kv_x: jax.Array):
 def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
                    kv_x: Optional[jax.Array] = None, causal: bool = True,
                    rope: bool = True, window: Optional[int] = None,
-                   use_flash: bool = False) -> jax.Array:
+                   use_flash: bool = False, block_q: int = 512,
+                   block_k: int = 512) -> jax.Array:
     """Full-sequence attention (train / prefill). x: (B, S, D)."""
     kv_src = x if kv_x is None else kv_x
     q, k, v = _qkv(p, x, kv_src)
@@ -164,7 +165,7 @@ def attention_full(p: dict, x: jax.Array, cfg: ModelConfig, *,
         k = apply_rope(k, pos_k, cfg.rope_theta)
     if use_flash and kv_x is None:
         out = flash_attention(q, k, v, causal=causal, window=window,
-                              interpret=True)
+                              bq=block_q, bk=block_k, interpret=True)
     else:
         out = _attend(q, k, v, causal=causal and kv_x is None, window=window)
     return shard_act(jnp.einsum("bhsk,hkd->bsd", out, p["wo"]), ACT_BSD)

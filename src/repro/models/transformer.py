@@ -26,6 +26,8 @@ class StepConfig:
     """Execution knobs (all are autotuner search dimensions)."""
 
     use_flash: bool = False       # Pallas kernel (TPU) vs jnp reference (CPU)
+    flash_block_q: int = 512      # Pallas flash-attention q tile
+    flash_block_k: int = 512      # Pallas flash-attention k tile
     remat: bool = True
     remat_policy: str = "nothing_saveable"
     loss_chunk: int = 512
@@ -109,7 +111,9 @@ def _self_block(h: jax.Array, lp: dict, cfg: ModelConfig,
         kv = (k, v)
     else:
         a = L.attention_full(lp["attn"], a_in, cfg, causal=True,
-                             window=cfg.window, use_flash=step.use_flash)
+                             window=cfg.window, use_flash=step.use_flash,
+                             block_q=step.flash_block_q,
+                             block_k=step.flash_block_k)
         kv = None
     h = h + a
     h = h + _ffn(lp, L.apply_norm(lp["ln2"], h, cfg), cfg, step)

@@ -35,7 +35,8 @@ import time
 from pathlib import Path
 from typing import Callable, Optional
 
-__all__ = ["DeviceTiming", "device_timing_available", "profile_sample"]
+__all__ = ["DeviceOps", "DeviceTiming", "device_timing_available",
+           "profile_ops", "profile_sample"]
 
 # substrings that mark a profiler process/track as device-side; host
 # tracks are named after python threads or "/host:CPU"
@@ -67,12 +68,36 @@ def device_timing_available() -> bool:
         return False
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceOps:
+    """Per-op device busy time of one profiled invocation.
+
+    ``by_name`` keys are normalized event names (leading ``%`` and any
+    ``scope/`` prefix stripped) so they join against HLO instruction
+    names; overlapping events under one name are summed.
+    """
+
+    total_s: float
+    by_name: dict[str, float]
+    n_events: int
+    source: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 def _looks_device(track_name: str) -> bool:
     name = track_name.lower()
     return any(marker in name for marker in _DEVICE_MARKERS)
 
 
-def _parse_device_time(root: Path) -> Optional[tuple[float, int, str]]:
+def normalize_op_name(name: str) -> str:
+    """Trace event name -> HLO instruction name (best effort): profilers
+    prefix op names with module scopes (``jit_f/.../%fusion.1``)."""
+    return name.rsplit("/", 1)[-1].strip().lstrip("%")
+
+
+def _parse_device_ops(root: Path) -> Optional[DeviceOps]:
     candidates = sorted(root.rglob("perfetto_trace.json.gz"))
     if not candidates:
         return None
@@ -95,15 +120,56 @@ def _parse_device_time(root: Path) -> Optional[tuple[float, int, str]]:
     if not device_pids:
         return None
     total_us = 0.0
+    by_name: dict[str, float] = {}
     n = 0
     for ev in events:
         if (isinstance(ev, dict) and ev.get("ph") == "X"
                 and ev.get("pid") in device_pids):
-            total_us += float(ev.get("dur", 0.0))
+            dur = float(ev.get("dur", 0.0))
+            total_us += dur
+            key = normalize_op_name(str(ev.get("name", "")))
+            if key:
+                by_name[key] = by_name.get(key, 0.0) + dur * 1e-6
             n += 1
     if n == 0:
         return None
-    return total_us * 1e-6, n, str(source)
+    return DeviceOps(total_s=total_us * 1e-6, by_name=by_name,
+                     n_events=n, source=str(source))
+
+
+def _parse_device_time(root: Path) -> Optional[tuple[float, int, str]]:
+    ops = _parse_device_ops(root)
+    if ops is None:
+        return None
+    return ops.total_s, ops.n_events, ops.source
+
+
+def profile_ops(sample_fn: Callable[[], object],
+                log_dir: Optional[str | Path] = None,
+                ) -> Optional[DeviceOps]:
+    """Run ``sample_fn`` once under the profiler; parse *per-op* device
+    time. Same degradation contract as :func:`profile_sample`: every
+    failure path (no jax, no trace, no device track) returns ``None``."""
+    try:
+        import jax
+    except Exception:
+        return None
+    tmp = None
+    try:
+        if log_dir is None:
+            tmp = tempfile.mkdtemp(prefix="repro-devprof-")
+            log_dir = tmp
+        try:
+            with jax.profiler.trace(str(log_dir),
+                                    create_perfetto_trace=True):
+                out = sample_fn()
+                jax.block_until_ready(out)
+        except Exception:
+            return None
+        return _parse_device_ops(Path(log_dir))
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
 
 
 def profile_sample(sample_fn: Callable[[], object],

@@ -6,7 +6,7 @@ from __future__ import annotations
 import textwrap
 
 from repro.analysis.hlo import (_shape_bytes, _shape_numel, parse_collectives,
-                                parse_hlo_cost)
+                                parse_hlo_cost, parse_hlo_ops)
 
 # ---------------------------------------------------------------------------
 # _shape_bytes / _shape_numel
@@ -33,6 +33,20 @@ def test_shape_bytes_scalar():
 def test_shape_bytes_unknown_dtype_skipped():
     assert _shape_bytes("token[]") == 0
     assert _shape_bytes("(f32[4]{0}, token[])") == 16
+
+
+def test_shape_bytes_fp8_one_byte_each():
+    # quantized ops must not land in the unhandled tally
+    assert _shape_bytes("f8e4m3fn[16,8]{1,0}") == 16 * 8
+    assert _shape_bytes("f8e5m2[32]{0}") == 32
+    assert _shape_bytes("(f8e4m3fnuz[4]{0}, f8e8m0fnu[4]{0})") == 8
+
+
+def test_fp8_convert_costed_not_unhandled():
+    text = "  %c = f8e4m3fn[64]{0} convert(f32[64]{0} %x)\n"
+    cost = parse_hlo_cost(text)
+    assert cost.unhandled == {}
+    assert cost.bytes_by_op["convert"] == 64 * 1 + 64 * 4
 
 
 def test_shape_numel_counts_unknown_dtypes():
@@ -157,3 +171,129 @@ def test_compiled_jax_dot_matches_formula():
     text = jax.jit(jnp.dot).lower(a, b).compile().as_text()
     cost = parse_hlo_cost(text)
     assert cost.flops_by_op.get("dot") == 2 * 64 * 48 * 32
+
+
+# ---------------------------------------------------------------------------
+# parse_hlo_ops (per-op records for roofline attribution)
+# ---------------------------------------------------------------------------
+
+
+def test_per_op_records_on_dot_module():
+    mod = parse_hlo_ops(DOT_MODULE)
+    # parameters are structural; only the dot yields a record
+    assert [op.name for op in mod.ops] == ["dot"]
+    dot = mod.by_name()["dot"]
+    assert dot.kind == "dot"
+    assert dot.flops == 2 * 64 * 48 * 32
+    assert dot.bytes_accessed == (64 * 32 + 32 * 48 + 64 * 48) * 4
+    assert dot.modeled
+    assert mod.unhandled == {}
+    # module totals agree with the flattened parser on a fusion-free module
+    cost = parse_hlo_cost(DOT_MODULE)
+    assert mod.flops == cost.flops
+    assert mod.bytes_accessed == cost.bytes_accessed
+
+
+FUSED_MODULE = textwrap.dedent("""\
+    HloModule fused
+
+    %fused_computation (p0: f32[128], p1: f32[128]) -> f32[128] {
+      %p0 = f32[128]{0} parameter(0)
+      %p1 = f32[128]{0} parameter(1)
+      %add.1 = f32[128]{0} add(f32[128]{0} %p0, f32[128]{0} %p1)
+      ROOT %tanh.2 = f32[128]{0} tanh(f32[128]{0} %add.1)
+    }
+
+    ENTRY %main (a: f32[128], b: f32[128]) -> f32[128] {
+      %a = f32[128]{0} parameter(0)
+      %b = f32[128]{0} parameter(1)
+      ROOT %fusion = f32[128]{0} fusion(f32[128]{0} %a, f32[128]{0} %b), kind=kLoop, calls=%fused_computation
+    }
+""")
+
+
+def test_fusion_cost_rolled_up_from_called_computation():
+    mod = parse_hlo_ops(FUSED_MODULE)
+    assert [op.name for op in mod.ops] == ["fusion"]
+    fusion = mod.ops[0]
+    assert fusion.kind == "fusion"
+    assert fusion.flops == 128 + 128          # add + tanh, one per element
+    assert fusion.bytes_accessed > 0
+    assert fusion.modeled
+    # fusion-body parameters must not pollute the unhandled tally
+    assert mod.unhandled == {}
+
+
+def test_reduce_costed_per_input_element():
+    text = textwrap.dedent("""\
+        ENTRY %main (x: f32[64,32]) -> f32[64] {
+          %x = f32[64,32]{1,0} parameter(0)
+          %c = f32[] constant(0)
+          ROOT %reduce.1 = f32[64]{0} reduce(f32[64,32]{1,0} %x, f32[] %c), dimensions={1}, to_apply=%add
+        }
+    """)
+    mod = parse_hlo_ops(text)
+    red = mod.by_name()["reduce.1"]
+    # one combiner application per input element (+1 for the init scalar)
+    assert red.flops == 64 * 32 + 1
+    assert red.kind == "reduce"
+
+
+def test_while_body_counted_once_and_flagged():
+    text = textwrap.dedent("""\
+        %body (p: f32[16]) -> f32[16] {
+          %p = f32[16]{0} parameter(0)
+          ROOT %add.b = f32[16]{0} add(f32[16]{0} %p, f32[16]{0} %p)
+        }
+
+        %cond (p: f32[16]) -> pred[] {
+          %p = f32[16]{0} parameter(0)
+          ROOT %lt = pred[] compare(f32[16]{0} %p, f32[16]{0} %p), direction=LT
+        }
+
+        ENTRY %main (x: f32[16]) -> f32[16] {
+          %x = f32[16]{0} parameter(0)
+          ROOT %while.1 = f32[16]{0} while(f32[16]{0} %x), condition=%cond, body=%body
+        }
+    """)
+    mod = parse_hlo_ops(text)
+    wh = mod.by_name()["while.1"]
+    assert wh.flops == 16                     # body counted exactly once
+    assert mod.unhandled == {"while": 1}      # trip count unknown -> partial
+
+
+def test_unmodeled_op_keeps_record_with_zero_cost():
+    text = textwrap.dedent("""\
+        ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+          %x = f32[4,4]{1,0} parameter(0)
+          ROOT %cholesky.1 = f32[4,4]{1,0} cholesky(f32[4,4]{1,0} %x)
+        }
+    """)
+    mod = parse_hlo_ops(text)
+    op = mod.by_name()["cholesky.1"]
+    assert not op.modeled                     # record exists for time-joins
+    assert op.flops == 0 and op.bytes_accessed == 0
+    assert mod.unhandled == {"cholesky": 1}
+
+
+def test_op_intensity_edge_cases():
+    mod = parse_hlo_ops(DOT_MODULE)
+    dot = mod.by_name()["dot"]
+    assert dot.intensity == dot.flops / dot.bytes_accessed
+    from repro.analysis.hlo import OpCost
+    assert OpCost("x", "exp", flops=4.0, bytes_accessed=0.0).intensity \
+        == float("inf")
+    assert OpCost("c", "copy", flops=0.0, bytes_accessed=8.0).intensity == 0.0
+    assert OpCost("t", "tuple", flops=0.0, bytes_accessed=0.0).intensity == 0.0
+
+
+def test_compiled_module_parses_per_op():
+    import pytest
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    text = jax.jit(jnp.dot).lower(a, b).compile().as_text()
+    mod = parse_hlo_ops(text)
+    dots = [op for op in mod.ops if op.kind == "dot"]
+    assert sum(op.flops for op in dots) == 2 * 64 * 48 * 32
